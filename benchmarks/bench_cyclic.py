@@ -1,0 +1,47 @@
+"""Table 6 — cyclic queries ({3,4}-clique, 4-cycle) across engines.
+
+Reproduces the paper's headline: worst-case-optimal joins stay flat where
+the Selinger-style pairwise baseline blows up its intermediates (the "-"
+timeouts in Table 6 are our ``JoinBlowup``/timeout entries).
+"""
+from __future__ import annotations
+
+from repro.core import JoinBlowup, count, get_query
+
+from .common import Row, bench_gdb, timed
+
+DATASETS = ["ca-GrQc", "wiki-Vote", "ego-Facebook", "p2p-Gnutella04"]
+QUERIES = ["3-clique", "4-clique", "4-cycle"]
+
+
+def run(quick: bool = True) -> list[Row]:
+    scale = 0.25 if quick else 1.0
+    timeout = 60 if quick else 600
+    rows: list[Row] = []
+    for ds in DATASETS:
+        gdb = bench_gdb(ds, scale)
+        m = gdb.csr.n_edges // 2
+        for qname in QUERIES:
+            q = get_query(qname)
+            ref, us = timed(lambda: count(q, gdb, engine="vlftj"),
+                            timeout_s=timeout)
+            rows.append(Row(f"t6/{qname}/{ds}/vlftj", us,
+                            f"count={ref};edges={m}"))
+            try:
+                c2, us2 = timed(
+                    lambda: count(q, gdb, engine="binary",
+                                  cap=20_000_000), timeout_s=timeout)
+                assert c2 == ref, (qname, ds, c2, ref)
+                rows.append(Row(f"t6/{qname}/{ds}/binary", us2,
+                                f"count={c2};slowdown="
+                                f"{us2 / max(us, 1):.1f}x"))
+            except JoinBlowup as e:
+                rows.append(Row(f"t6/{qname}/{ds}/binary", float("inf"),
+                                f"blowup_rows={e.rows}"))
+            # Minesweeper analogue on cyclic = hybrid (Idea 7 skeleton)
+            c3, us3 = timed(lambda: count(q, gdb, engine="hybrid"),
+                            timeout_s=timeout)
+            assert c3 == ref
+            rows.append(Row(f"t6/{qname}/{ds}/hybrid", us3,
+                            f"count={c3}"))
+    return rows

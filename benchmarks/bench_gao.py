@@ -1,0 +1,41 @@
+"""Table 4 — GAO selection: NEO vs non-NEO orders on the 4-path.
+
+The paper's 7 representative orderings of (a,b,c,d,e); ABCDE/BACDE/BCADE/
+CBADE/CBDAE are NEOs, ABDCE/BADCE are not.  Run on both the faithful
+Minesweeper (small scale: the CDS chain property breaks for non-NEO,
+costing spec-branch blowup) and the vectorized engine (level order changes
+probe fan-out).
+"""
+from __future__ import annotations
+
+from repro.core import Minesweeper, VLFTJ, get_query, is_neo, Hypergraph
+
+from .common import Row, bench_gdb, timed
+
+ORDERS = ["abcde", "bacde", "bcade", "cbade", "cbdae", "abdce", "badce"]
+
+
+def run(quick: bool = True) -> list[Row]:
+    q = get_query("4-path")
+    hg = Hypergraph.of(q)
+    rows: list[Row] = []
+    gdb_small = bench_gdb("ca-GrQc", 0.012 if quick else 0.05,
+                          selectivity=8)
+    db = gdb_small.to_database()
+    gdb = bench_gdb("ca-GrQc", 0.12 if quick else 1.0, selectivity=8)
+    ref = None
+    for order in ORDERS:
+        gao = tuple(order)
+        neo = is_neo(hg, gao)
+        c1, us_ms = timed(lambda: Minesweeper(q, db, gao=gao).count(),
+                          timeout_s=90)
+        c2, us_vl = timed(lambda: VLFTJ(q, gdb, gao=gao).count(),
+                          timeout_s=90)
+        if ref is None:
+            ref = (c1, c2)
+        assert (c1, c2) == ref, (order, c1, c2, ref)
+        rows.append(Row(f"t4/gao-{order}/ms", us_ms,
+                        f"neo={neo};count={c1}"))
+        rows.append(Row(f"t4/gao-{order}/vlftj", us_vl,
+                        f"neo={neo};count={c2}"))
+    return rows

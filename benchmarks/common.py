@@ -1,0 +1,51 @@
+"""Shared benchmark scaffolding.
+
+Each bench module exposes ``run(quick=True) -> list[Row]``; ``run.py``
+drives them all and prints ``name,us_per_call,derived`` CSV (one line per
+measurement), mirroring one paper table/figure per module.
+
+Graphs are SNAP-like synthetics (see repro.graphs.generators).  ``quick``
+scales sizes for the CPU container; pass ``--full`` for larger runs.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import GraphDB
+from repro.graphs import node_sample
+from repro.graphs.generators import make_snap_like
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn, repeats: int = 1, timeout_s: float = 120.0):
+    """(result, us_per_call); returns (None, inf) past the timeout."""
+    t0 = time.time()
+    result = None
+    n = 0
+    for _ in range(repeats):
+        result = fn()
+        n += 1
+        if time.time() - t0 > timeout_s:
+            break
+    dt = (time.time() - t0) / max(1, n)
+    return result, dt * 1e6
+
+
+def bench_gdb(dataset: str, scale: float, seed: int = 0,
+              selectivity: float = 8.0) -> GraphDB:
+    g = make_snap_like(dataset, seed=seed, scale=scale)
+    unary = {f"v{i}": node_sample(g.n_nodes, selectivity, seed=17 * i + 1)
+             for i in range(1, 5)}
+    return GraphDB(g, unary)

@@ -1,0 +1,54 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs paper-scale
+sizes (slow on CPU); default is the quick profile.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: cyclic,acyclic,ideas,gao,"
+                         "granularity,scaling,agm")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (bench_acyclic, bench_agm, bench_cyclic, bench_gao,
+                   bench_granularity, bench_ideas, bench_scaling,
+                   bench_selectivity)
+    modules = {
+        "cyclic": bench_cyclic,        # Table 6
+        "acyclic": bench_acyclic,      # Table 7
+        "ideas": bench_ideas,          # Tables 1-3
+        "gao": bench_gao,              # Table 4
+        "granularity": bench_granularity,  # Table 5
+        "scaling": bench_scaling,      # Figures 6-7
+        "selectivity": bench_selectivity,  # Figures 3-5
+        "agm": bench_agm,              # Appendix A
+    }
+    chosen = (args.only.split(",") if args.only else list(modules))
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for key in chosen:
+        mod = modules[key]
+        try:
+            for row in mod.run(quick=quick):
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{key}/ERROR,inf,{type(e).__name__}: {e}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s, module_failures={failures}",
+          file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

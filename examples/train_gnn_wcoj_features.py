@@ -1,0 +1,66 @@
+"""The paper's technique feeding the model zoo: WCOJ structural features.
+
+Per-node triangle counts — computed by the vectorized LFTJ engine — are
+appended to node features before training a GatedGCN.  This is the
+integration point described in DESIGN.md §4: the join engine and the GNNs
+share the same CSR trie.
+
+    PYTHONPATH=src python examples/train_gnn_wcoj_features.py
+"""
+import jax
+import numpy as np
+
+from repro.core import GraphDB, VLFTJ, get_query
+from repro.graphs import powerlaw_cluster
+from repro.models.gnn.data import GraphBatch
+from repro.models.gnn.gatedgcn import (GatedGCNConfig, gatedgcn_loss,
+                                       init_gatedgcn)
+from repro.train.loop import Trainer
+from repro.train.optimizer import OptimizerConfig
+
+g = powerlaw_cluster(n=800, m_per_node=4, seed=0)
+gdb = GraphDB(g, {})
+
+# 1) enumerate triangles with the worst-case-optimal join, scatter counts
+eng = VLFTJ(get_query("3-clique"), gdb)
+tris = eng.enumerate()                      # (T, 3) node triples, a<b<c
+tri_count = np.zeros(g.n_nodes, np.float32)
+np.add.at(tri_count, tris.ravel(), 1.0)
+print(f"{tris.shape[0]} triangles; max per node {int(tri_count.max())}")
+
+# 2) labels correlated with triangle membership (structure detection task)
+rng = np.random.default_rng(0)
+labels = (tri_count > np.median(tri_count)).astype(np.int32)
+base_feat = rng.standard_normal((g.n_nodes, 8)).astype(np.float32)
+
+
+def make_batch(with_wcoj: bool) -> GraphBatch:
+    feats = [base_feat]
+    if with_wcoj:
+        feats.append(np.log1p(tri_count)[:, None])
+    feat = np.concatenate(feats, 1)
+    ea = g.edge_array()
+    return GraphBatch(src=ea[:, 0], dst=ea[:, 1], n_nodes=g.n_nodes,
+                      node_feat=feat, labels=labels)
+
+
+def train(with_wcoj: bool, steps: int = 60) -> float:
+    batch = make_batch(with_wcoj)
+    cfg = GatedGCNConfig(n_layers=3, d_hidden=32,
+                         d_in=batch.node_feat.shape[1], n_classes=2)
+    tr = Trainer(
+        loss_fn=lambda p, b: gatedgcn_loss(p, batch, cfg),
+        params=init_gatedgcn(jax.random.PRNGKey(0), cfg),
+        opt_cfg=OptimizerConfig(lr=3e-3, warmup_steps=10,
+                                total_steps=steps),
+        get_batch=lambda s: {"_": np.zeros(1)})
+    hist = tr.run(steps, log_every=steps)
+    return hist[-1]["loss"]
+
+
+plain = train(with_wcoj=False)
+wcoj = train(with_wcoj=True)
+print(f"final loss without WCOJ features: {plain:.4f}")
+print(f"final loss with    WCOJ features: {wcoj:.4f}")
+assert wcoj < plain, "structural features should help this task"
+print("WCOJ structural features improve the GNN ✓")

@@ -1,0 +1,70 @@
+"""Train a small LM end-to-end with the production substrate.
+
+Demonstrates the full loop on CPU: deterministic pipeline, AdamW+cosine,
+grad accumulation, async fault-tolerant checkpointing, auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import LMTokenPipeline
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.train.loop import Trainer
+from repro.train.optimizer import OptimizerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt", default="/tmp/repro-lm-ckpt")
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = TransformerConfig(
+        name="demo-lm", n_layers=args.layers, d_model=args.d_model,
+        n_heads=4, n_kv_heads=2, d_ff=4 * args.d_model, vocab_size=1024,
+        dtype=jnp.float32, remat=False)
+    print(f"model: {cfg.n_params/1e6:.2f}M params")
+
+    # a learnable synthetic stream: tokens follow t+1 = (3t+7) % V with
+    # noise, so loss decreasing proves the pipeline end to end
+    import numpy as np
+
+    def get_batch(step):
+        rng = np.random.default_rng(step)
+        b, s = 16, 64
+        t0 = rng.integers(0, 1024, (b, 1))
+        seq = [t0]
+        for _ in range(s):
+            nxt = (3 * seq[-1] + 7) % 1024
+            flip = rng.random((b, 1)) < 0.05
+            nxt = np.where(flip, rng.integers(0, 1024, (b, 1)), nxt)
+            seq.append(nxt)
+        arr = np.concatenate(seq, 1).astype(np.int32)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+    trainer = Trainer(
+        loss_fn=lambda p, b: loss_fn(p, b, cfg),
+        params=init_params(jax.random.PRNGKey(0), cfg),
+        opt_cfg=OptimizerConfig(lr=3e-3, warmup_steps=20,
+                                total_steps=args.steps),
+        get_batch=get_batch,
+        ckpt_dir=args.ckpt, ckpt_every=50, microbatches=2)
+    resumed = trainer.maybe_resume()
+    if resumed:
+        print(f"resumed from checkpoint at step {resumed}")
+    hist = trainer.run(args.steps, log_every=20, resume="none")
+    for h in hist:
+        print(f"  step {h['step']:4d}  loss {h['loss']:.3f}  "
+              f"lr {h['lr']:.2e}  |g| {h['grad_norm']:.2f}")
+    assert hist[-1]["loss"] < hist[0]["loss"], "loss must decrease"
+    print("final loss", round(hist[-1]["loss"], 3),
+          "(checkpoints in", args.ckpt + ")")
+
+
+if __name__ == "__main__":
+    main()

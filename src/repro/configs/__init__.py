@@ -1,0 +1,23 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from .chatglm3_6b import ARCH as _chatglm3
+from .command_r_plus_104b import ARCH as _commandr
+from .egnn import ARCH as _egnn
+from .gatedgcn import ARCH as _gatedgcn
+from .granite_moe_3b_a800m import ARCH as _granite
+from .mace import ARCH as _mace
+from .moonshot_v1_16b_a3b import ARCH as _moonshot
+from .pna import ARCH as _pna
+from .stablelm_3b import ARCH as _stablelm
+from .wcoj import WCOJArch
+from .xdeepfm import ARCH as _xdeepfm
+
+ARCHS = {
+    a.arch_id: a for a in [
+        _stablelm, _chatglm3, _commandr, _moonshot, _granite,
+        _gatedgcn, _egnn, _pna, _mace, _xdeepfm, WCOJArch(),
+    ]
+}
+
+
+def get_arch(arch_id: str):
+    return ARCHS[arch_id]

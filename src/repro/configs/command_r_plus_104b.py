@@ -1,0 +1,33 @@
+"""command-r-plus-104b [hf:CohereForAI]: 64L d_model=12288 96H (GQA kv=8)
+d_ff=33792 vocab=256000 — no-bias, tied embeddings.
+
+100B-class sharding: FSDP (params/opt sharded over data too),
+sequence-parallel residual stream, microbatched grad accumulation,
+sequence-chunked LM head (see DESIGN.md §5)."""
+import jax.numpy as jnp
+
+from ..models.transformer import TransformerConfig
+from .common import LMArch
+
+ARCH = LMArch(
+    arch_id="command-r-plus-104b",
+    cfg=TransformerConfig(
+        name="command-r-plus-104b", n_layers=64, d_model=12288, n_heads=96,
+        n_kv_heads=8, d_ff=33792, vocab_size=256000, rope_frac=1.0,
+        act="silu", norm="layernorm", use_bias=False, tie_embeddings=True,
+        dtype=jnp.bfloat16, remat=True, fsdp=True, seq_shard=True,
+        loss_seq_chunk=512),
+    microbatches=8,
+    opt_variants={
+        # §Perf iterations (EXPERIMENTS.md): B1 drops the explicit q
+        # head-shard constraint that triggers SPMD involuntary full
+        # rematerialization; B2 donates params+opt (state aliasing);
+        # B3 halves the microbatch count (FSDP weight all-gathers are
+        # paid per microbatch x layer).
+        "train_4k_b1": ("train_4k", dict(attn_head_shard=False)),
+        "train_4k_b2": ("train_4k", dict(attn_head_shard=False),
+                        dict(donate=True)),
+        "train_4k_b3": ("train_4k", dict(attn_head_shard=False),
+                        dict(donate=True, microbatches=4)),
+    },
+)

@@ -1,0 +1,422 @@
+"""Arch-spec machinery: every assigned architecture is a selectable config
+(``--arch <id>``) exposing, per input shape, a dry-run *cell*: the jit-able
+step function + abstract args (ShapeDtypeStruct, zero allocation) +
+in/out shardings for the production mesh.
+
+Families: lm (train/prefill/decode), gnn (full-graph & sampled train),
+recsys (train / online / bulk / retrieval), wcoj (the paper's engine).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..layers.moe import MoEConfig
+from ..models import transformer as tfm
+from ..models.gnn import data as gnn_data
+from ..models import xdeepfm as xdf
+from ..train.optimizer import OptimizerConfig, init_opt_state
+from ..train.loop import make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    kind: str                      # train | prefill | decode | forward
+    fn: Callable
+    args: tuple
+    in_shardings: Any = None
+    out_shardings: Any = None
+    note: str = ""
+    skip: str | None = None       # reason when the cell is n/a
+    model_flops: float = 0.0      # 6·N·D (or family equivalent)
+    donate: tuple = ()            # argnums donated (state in == state out)
+    # cost probes: XLA's cost_analysis counts a lax.scan body ONCE, so
+    # scanned-layer models expose probe cells at n_layers=1,2; the dry-run
+    # extrapolates cost(L) = c1 + (L-1)·(c2-c1) (exact: cost is linear in
+    # L) while memory/compile stats come from the real full program.
+    probe_builder: Callable[[int], "Cell"] | None = None
+    n_scan: int = 0
+
+
+def named(mesh, spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dataxes(mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+@dataclass
+class LMArch:
+    arch_id: str
+    cfg: tfm.TransformerConfig
+    microbatches: int = 1
+    full_attention: bool = True    # -> long_500k skipped
+    shapes: dict = field(default_factory=lambda: dict(LM_SHAPES))
+    # §Perf variants: shape name -> (base shape, cfg overrides, extras)
+    # extras: microbatches=..., donate=True
+    opt_variants: dict = field(default_factory=dict)
+
+    family = "lm"
+
+    def __post_init__(self):
+        for name, spec in self.opt_variants.items():
+            self.shapes[name] = dict(self.shapes[spec[0]], base=spec[0])
+
+    def reduced_cfg(self) -> tfm.TransformerConfig:
+        moe = self.cfg.moe
+        if moe is not None:
+            moe = replace(moe, n_experts=8, top_k=min(2, moe.top_k),
+                          d_ff_expert=64,
+                          n_shared_experts=min(1, moe.n_shared_experts))
+        return replace(
+            self.cfg, n_layers=2, d_model=64,
+            n_heads=4, n_kv_heads=max(1, min(4, self.cfg.n_kv_heads)),
+            d_head=16, d_ff=128, vocab_size=512, moe=moe,
+            dtype=jnp.float32, fsdp=False, seq_shard=False,
+            loss_seq_chunk=0, max_cache_len=64)
+
+    def _abstract_params(self, cfg):
+        return jax.eval_shape(
+            lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+
+    def cell(self, shape_name: str, mesh) -> Cell:
+        cfg = self.cfg
+        micro = self.microbatches
+        extras = {}
+        if shape_name in self.opt_variants:
+            spec = self.opt_variants[shape_name]
+            cfg = replace(cfg, **spec[1])
+            extras = spec[2] if len(spec) > 2 else {}
+            micro = extras.get("microbatches", micro)
+        c = self._cell_inner(shape_name, mesh, cfg, micro)
+        if extras.get("donate") and c.skip is None:
+            c.donate = (0, 1) if c.kind == "train" else (1,)
+        if c.skip is None and cfg.n_layers > 2:
+            # probes unroll BOTH loops (layers=1,2; all microbatches) so
+            # per-microbatch collectives are counted
+            c.probe_builder = lambda n: self._cell_inner(
+                shape_name, mesh,
+                replace(cfg, n_layers=n, loss_seq_chunk=0), micro,
+                unroll_micro=True)
+            c.n_scan = cfg.n_layers
+        return c
+
+    def _cell_inner(self, shape_name: str, mesh, cfg,
+                    microbatches: int, unroll_micro: bool = False) -> Cell:
+        sh = self.shapes[shape_name]
+        if shape_name == "long_500k" and self.full_attention:
+            return Cell(self.arch_id, shape_name, sh["kind"], None, (),
+                        skip="pure full-attention arch: 500k decode needs "
+                             "sub-quadratic attention (see DESIGN.md)")
+        seq, batch = sh["seq"], sh["batch"]
+        pspecs = tfm.param_specs(cfg)
+        params = self._abstract_params(cfg)
+        psh = named(mesh, pspecs)
+        dax = _dataxes(mesh)
+        mf = 6.0 * cfg.n_active_params * batch * seq
+        if sh["kind"] == "train":
+            opt = jax.eval_shape(init_opt_state, params)
+            opt_sh = named(mesh, {
+                "m": pspecs, "v": pspecs, "step": P()})
+            batch_abs = {"tokens": sds((batch, seq), jnp.int32),
+                         "labels": sds((batch, seq), jnp.int32)}
+            bsh = named(mesh, {"tokens": P(dax, None),
+                               "labels": P(dax, None)})
+            ocfg = OptimizerConfig()
+            step = make_train_step(
+                lambda p, b: tfm.loss_fn(p, b, cfg, mesh), ocfg,
+                microbatches, unroll_micro=unroll_micro)
+            return Cell(self.arch_id, shape_name, "train", step,
+                        (params, opt, batch_abs),
+                        in_shardings=(psh, opt_sh, bsh),
+                        out_shardings=(psh, opt_sh, None),
+                        model_flops=mf)
+        if sh["kind"] == "prefill":
+            toks = sds((batch, seq), jnp.int32)
+            csp = tfm.cache_specs(cfg, mesh)
+            fn = lambda p, t: tfm.prefill(p, t, cfg, mesh, max_len=seq)
+            out_sh = (named(mesh, csp),
+                      named(mesh, P(dax, None, "model")))
+            return Cell(self.arch_id, shape_name, "prefill", fn,
+                        (params, toks),
+                        in_shardings=(psh, named(mesh, P(dax, None))),
+                        out_shardings=out_sh,
+                        model_flops=2.0 * cfg.n_active_params * batch * seq)
+        # decode: one new token against a seq-length cache
+        csp = tfm.cache_specs(cfg, mesh)
+        cache = {
+            "k": sds((cfg.n_layers, batch, cfg.n_kv_heads, seq,
+                      cfg.head_dim), cfg.dtype),
+            "v": sds((cfg.n_layers, batch, cfg.n_kv_heads, seq,
+                      cfg.head_dim), cfg.dtype),
+            "len": sds((), jnp.int32),
+        }
+        toks = sds((batch, 1), jnp.int32)
+        fn = lambda p, c, t: tfm.decode_step(p, c, t, cfg, mesh)
+        return Cell(self.arch_id, shape_name, "decode", fn,
+                    (params, cache, toks),
+                    in_shardings=(psh, named(mesh, csp),
+                                  named(mesh, P(dax, None))),
+                    out_shardings=(named(mesh, P(dax, None, "model")),
+                                   named(mesh, csp)),
+                    model_flops=2.0 * cfg.n_active_params * batch)
+
+    def smoke(self):
+        cfg = self.reduced_cfg()
+        p = tfm.init_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                  cfg.vocab_size)
+        batch = {"tokens": toks, "labels": toks}
+        loss, grads = jax.value_and_grad(
+            lambda pp: tfm.loss_fn(pp, batch, cfg))(p)
+        assert np.isfinite(float(loss)), self.arch_id
+        for g in jax.tree.leaves(grads):
+            assert np.isfinite(np.asarray(g)).all(), self.arch_id
+        cache, logits = tfm.prefill(p, toks, cfg, max_len=32)
+        assert logits.shape == (2, 1, cfg.vocab_size)
+        lg, c2 = tfm.decode_step(p, cache, toks[:, :1], cfg)
+        assert lg.shape == (2, 1, cfg.vocab_size)
+        assert np.isfinite(np.asarray(lg)).all()
+        return {"loss": float(loss)}
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", n_nodes=2708, n_edges=10556,
+                          d_feat=1433),
+    "minibatch_lg": dict(kind="train", n_nodes=232965, n_edges=114615892,
+                         batch_nodes=1024, fanouts=(15, 10), d_feat=602),
+    "ogb_products": dict(kind="train", n_nodes=2449029, n_edges=61859140,
+                         d_feat=100),
+    "molecule": dict(kind="train", n_nodes=30, n_edges=64, batch=128,
+                     d_feat=16),
+}
+
+
+@dataclass
+class GNNArch:
+    arch_id: str
+    make_cfg: Callable[[int, int], Any]   # (d_in, n_classes) -> cfg
+    init_fn: Callable
+    loss_fn: Callable                     # (params, GraphBatch, cfg)
+    needs_coords: bool = False
+    scan_layers: bool = False             # model scans layers -> cost probe
+    shapes: dict = field(default_factory=lambda: dict(GNN_SHAPES))
+    # §Perf variants: extra shape name -> (base shape, cfg overrides)
+    opt_variants: dict = field(default_factory=dict)
+
+    family = "gnn"
+
+    def __post_init__(self):
+        for name, spec in self.opt_variants.items():
+            extra = spec[2] if len(spec) > 2 else {}
+            self.shapes[name] = dict(self.shapes[spec[0]], base=spec[0],
+                                     **extra)
+
+    def _batch_abs(self, shape_name):
+        sh = self.shapes[shape_name]
+        if shape_name == "minibatch_lg":
+            b, f1, f2 = sh["batch_nodes"], *sh["fanouts"]
+            n = b + b * f1 + b * f1 * f2
+            e = 2 * (b * f1 + b * f1 * f2)
+            n_graphs = 1
+        elif shape_name == "molecule":
+            n = sh["n_nodes"] * sh["batch"]
+            e = 2 * sh["n_edges"] * sh["batch"]
+            n_graphs = sh["batch"]
+        else:
+            n, e = sh["n_nodes"], 2 * sh["n_edges"]
+            n_graphs = 1
+        # edge arrays shard over (pod, data): pad to the 512 = lcm(32, 16)
+        # boundary (dummy self-loops on the sink node, as pad_graph does)
+        e = -(-e // 512) * 512
+        if sh.get("pad_nodes"):  # node-sharded variants need divisibility
+            n = -(-n // 512) * 512
+        d = sh["d_feat"]
+        batch = {
+            "src": sds((e,), jnp.int32),
+            "dst": sds((e,), jnp.int32),
+            "node_feat": sds((n, d), jnp.float32),
+            "labels": sds((n,), jnp.int32),
+        }
+        if self.needs_coords:
+            batch["coords"] = sds((n, 3), jnp.float32)
+            batch["graph_id"] = sds((n,), jnp.int32)
+        return batch, n, e, n_graphs, d
+
+    def _to_graph(self, batch, n, n_graphs):
+        return gnn_data.GraphBatch(
+            src=batch["src"], dst=batch["dst"], n_nodes=n,
+            node_feat=batch["node_feat"], labels=batch["labels"],
+            coords=batch.get("coords"), graph_id=batch.get("graph_id"),
+            n_graphs=n_graphs)
+
+    def cell(self, shape_name: str, mesh) -> Cell:
+        cfg0 = self.make_cfg(self.shapes[shape_name]["d_feat"], 16)
+        if shape_name in self.opt_variants:
+            cfg0 = replace(cfg0, **self.opt_variants[shape_name][1])
+        c = self._cell_inner(shape_name, mesh, cfg0)
+        if self.scan_layers and getattr(cfg0, "n_layers", 0) > 2:
+            c.probe_builder = lambda nl: self._cell_inner(
+                shape_name, mesh, replace(cfg0, n_layers=nl))
+            c.n_scan = cfg0.n_layers
+        return c
+
+    def _cell_inner(self, shape_name: str, mesh, cfg) -> Cell:
+        batch_abs, n, e, n_graphs, d = self._batch_abs(shape_name)
+        params = jax.eval_shape(
+            lambda: self.init_fn(jax.random.PRNGKey(0), cfg))
+        opt = jax.eval_shape(init_opt_state, params)
+        dax = _dataxes(mesh)
+        edge_spec = P(dax)
+        bsp = {k: (edge_spec if k in ("src", "dst") else P())
+               for k in batch_abs}
+        ocfg = OptimizerConfig()
+        step = make_train_step(
+            lambda p, b: self.loss_fn(p, self._to_graph(b, n, n_graphs),
+                                      cfg), ocfg)
+        rep = jax.tree.map(lambda _: P(), params)
+        osh = {"m": rep, "v": rep, "step": P()}
+        # message FLOPs estimate: edges x d x d per layer x 3 passes (fwd+bwd)
+        layers = getattr(cfg, "n_layers", 2)
+        dh = getattr(cfg, "d_hidden", 64)
+        mf = 6.0 * e * dh * dh * layers
+        return Cell(self.arch_id, shape_name, "train", step,
+                    (params, opt, batch_abs),
+                    in_shardings=(named(mesh, rep), named(mesh, osh),
+                                  named(mesh, bsp)),
+                    out_shardings=(named(mesh, rep), named(mesh, osh),
+                                   None),
+                    model_flops=mf)
+
+    def smoke(self):
+        g = gnn_data.random_graph_batch(
+            64, 256, 16, seed=0, coords=True, n_graphs=4, n_classes=16)
+        cfg = self.make_cfg(16, 16)
+        p = self.init_fn(jax.random.PRNGKey(0), cfg)
+        loss, grads = jax.value_and_grad(
+            lambda pp: self.loss_fn(pp, g, cfg))(p)
+        assert np.isfinite(float(loss)), self.arch_id
+        for gr in jax.tree.leaves(grads):
+            assert np.isfinite(np.asarray(gr)).all(), self.arch_id
+        return {"loss": float(loss)}
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="forward", batch=512),
+    "serve_bulk": dict(kind="forward", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_000_000),
+}
+
+
+@dataclass
+class RecsysArch:
+    arch_id: str
+    cfg: xdf.XDeepFMConfig
+    shapes: dict = field(default_factory=lambda: dict(RECSYS_SHAPES))
+
+    family = "recsys"
+
+    def reduced_cfg(self):
+        return replace(self.cfg, vocab_per_field=1000,
+                       cin_layers=(16, 16), mlp_dims=(32, 32))
+
+    def cell(self, shape_name: str, mesh) -> Cell:
+        sh = self.shapes[shape_name]
+        cfg = self.cfg
+        params = jax.eval_shape(
+            lambda: xdf.init_xdeepfm(jax.random.PRNGKey(0), cfg))
+        pspec = jax.tree.map(lambda _: P(), params)
+        pspec["embed"] = P("model", None)      # row-sharded table
+        pspec["linear"] = P("model", None)
+        psh = named(mesh, pspec)
+        dax = _dataxes(mesh)
+        f = cfg.n_sparse
+        d = cfg.embed_dim
+        cin_fl = sum(cfg.cin_layers) * f * d * 200  # rough per-sample
+        if sh["kind"] == "train":
+            b = sh["batch"]
+            batch_abs = {"ids": sds((b, f), jnp.int32),
+                         "labels": sds((b,), jnp.int32)}
+            opt = jax.eval_shape(init_opt_state, params)
+            osh = named(mesh, {"m": pspec, "v": pspec, "step": P()})
+            step = make_train_step(
+                lambda p, bb: xdf.xdeepfm_loss(p, bb, cfg),
+                OptimizerConfig())
+            return Cell(self.arch_id, shape_name, "train", step,
+                        (params, opt, batch_abs),
+                        in_shardings=(psh, osh,
+                                      named(mesh, {"ids": P(dax, None),
+                                                   "labels": P(dax)})),
+                        out_shardings=(psh, osh, None),
+                        model_flops=6.0 * sh["batch"] * cin_fl)
+        if sh["kind"] == "forward":
+            b = sh["batch"]
+            ids = sds((b, f), jnp.int32)
+            fn = lambda p, i: xdf.xdeepfm_forward(p, i, cfg)
+            return Cell(self.arch_id, shape_name, "forward", fn,
+                        (params, ids),
+                        in_shardings=(psh, named(mesh, P(dax, None))),
+                        out_shardings=named(mesh, P(dax)),
+                        model_flops=2.0 * b * cin_fl)
+        # retrieval: 1 query x 1M candidates
+        nc = sh["n_candidates"]
+        fn = lambda p, q, c: xdf.retrieval_scores(p, q, c, cfg)
+        return Cell(self.arch_id, shape_name, "retrieval", fn,
+                    (params, sds((1, f), jnp.int32),
+                     sds((nc,), jnp.int32)),
+                    in_shardings=(psh, named(mesh, P(None, None)),
+                                  named(mesh, P(dax))),
+                    out_shardings=named(mesh, P(dax)),
+                    model_flops=2.0 * nc * d)
+
+    def smoke(self):
+        cfg = self.reduced_cfg()
+        p = xdf.init_xdeepfm(jax.random.PRNGKey(0), cfg)
+        ids = jax.random.randint(jax.random.PRNGKey(1), (32, cfg.n_sparse),
+                                 0, cfg.vocab_per_field)
+        batch = {"ids": ids,
+                 "labels": jnp.zeros((32,), jnp.int32)}
+        loss, grads = jax.value_and_grad(
+            lambda pp: xdf.xdeepfm_loss(pp, batch, cfg))(p)
+        assert np.isfinite(float(loss))
+        s = xdf.retrieval_scores(p, ids[:1], jnp.arange(100), cfg)
+        assert np.isfinite(np.asarray(s)).all()
+        return {"loss": float(loss)}

@@ -1,0 +1,81 @@
+"""Device-resident graph database for the vectorized engines.
+
+The edge relation lives as CSR (``indptr``/``indices``) int32 arrays; unary
+sample predicates live as dense boolean bitmaps over the node domain — a
+gather into a bitmap is the TPU-native membership probe for selective sets.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.csr import CSRGraph
+from .relation import Database, Relation
+
+
+@dataclass
+class GraphDB:
+    """Host+device view of an ``edge`` CSR plus unary node sets."""
+
+    csr: CSRGraph
+    unary: dict[str, np.ndarray] = field(default_factory=dict)
+
+    # device arrays, built lazily
+    _dev: dict = field(default_factory=dict, repr=False)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.csr.n_nodes
+
+    @property
+    def max_degree(self) -> int:
+        return self.csr.max_degree
+
+    @property
+    def bsearch_iters(self) -> int:
+        return int(math.ceil(math.log2(max(2, self.max_degree)))) + 1
+
+    def dev(self, key: str):
+        if key in self._dev:
+            return self._dev[key]
+        if key == "indptr":
+            v = jnp.asarray(self.csr.indptr, dtype=jnp.int32)
+        elif key == "indices":
+            v = jnp.asarray(self.csr.indices, dtype=jnp.int32)
+        elif key == "src_ids":  # edge -> source node id (for segment ops)
+            v = jnp.asarray(
+                np.repeat(np.arange(self.csr.n_nodes, dtype=np.int32),
+                          self.csr.degrees), dtype=jnp.int32)
+        elif key.startswith("summary:"):
+            stride = int(key.split(":", 1)[1])
+            v = jnp.asarray(self.csr.indices[::stride], dtype=jnp.int32)
+        elif key.startswith("bitmap:"):
+            name = key.split(":", 1)[1]
+            bm = np.zeros(self.csr.n_nodes, dtype=bool)
+            ids = self.unary[name]
+            bm[ids[ids < self.csr.n_nodes]] = True
+            v = jnp.asarray(bm)
+        else:
+            raise KeyError(key)
+        self._dev[key] = v
+        return v
+
+    def to_database(self) -> Database:
+        """Bridge to the host reference engines."""
+        rels = {"edge": self.csr.to_relation()}
+        for name, ids in self.unary.items():
+            rels[name] = Relation.from_set(ids, name)
+        return Database(rels)
+
+    @classmethod
+    def from_database(cls, db: Database) -> "GraphDB":
+        edge = db.relations["edge"]
+        csr = CSRGraph.from_edges(edge.data[:, 0], edge.data[:, 1],
+                                  symmetrize=True)
+        unary = {name: r.data[:, 0]
+                 for name, r in db.relations.items()
+                 if r.arity == 1}
+        return cls(csr, unary)

@@ -1,0 +1,54 @@
+"""Unified join-engine API.
+
+``count(query, gdb, engine=...)`` dispatches to any of the engines:
+
+  * ``lftj_ref``        — faithful scalar LeapFrog TrieJoin (oracle)
+  * ``minesweeper_ref`` — faithful Minesweeper w/ CDS (oracle)
+  * ``binary``          — Selinger-style pairwise baseline
+  * ``vlftj``           — vectorized worst-case-optimal join (TPU-native)
+  * ``yannakakis``      — vectorized #MS / Yannakakis counting (β-acyclic)
+  * ``hybrid``          — tree message passing + seeded core LFTJ
+  * ``auto``            — the paper's summary heuristic: Minesweeper-analogue
+                          for acyclic, hybrid for lollipop-shaped, LFTJ for
+                          cyclic (Table 6/7 winners).
+"""
+from __future__ import annotations
+
+from .binary_join import BinaryJoin
+from .device_graph import GraphDB
+from .hybrid import HybridDecomposition, HybridJoin
+from .hypergraph import Hypergraph, is_beta_acyclic
+from .lftj_ref import LFTJ
+from .minesweeper_ref import Minesweeper
+from .query import Query
+from .vlftj import VLFTJ
+from .yannakakis import CountingYannakakis, NotTreeShaped
+
+ENGINES = ("lftj_ref", "minesweeper_ref", "binary", "vlftj", "yannakakis",
+           "hybrid", "auto")
+
+
+def pick_engine(query: Query) -> str:
+    if is_beta_acyclic(Hypergraph.of(query)) and not query.filters:
+        return "yannakakis"
+    if HybridDecomposition(query).applicable:
+        return "hybrid"
+    return "vlftj"
+
+
+def count(query: Query, gdb: GraphDB, engine: str = "auto", **kw) -> int:
+    if engine == "auto":
+        engine = pick_engine(query)
+    if engine == "vlftj":
+        return VLFTJ(query, gdb, **kw).count()
+    if engine == "yannakakis":
+        return CountingYannakakis(query, gdb).count()
+    if engine == "hybrid":
+        return HybridJoin(query, gdb, **kw).count()
+    if engine == "lftj_ref":
+        return LFTJ(query, gdb.to_database()).count()
+    if engine == "minesweeper_ref":
+        return Minesweeper(query, gdb.to_database(), **kw).count()
+    if engine == "binary":
+        return BinaryJoin(query, gdb.to_database(), **kw).count()
+    raise ValueError(f"unknown engine {engine!r}; options: {ENGINES}")

@@ -1,0 +1,49 @@
+"""Jitted public wrappers for the kernel layer.
+
+``use_pallas`` selects the Pallas TPU kernels (validated under
+``interpret=True`` on CPU); default is the pure-jnp reference path, which XLA
+fuses well on CPU and which lowers to identical HLO shapes for the roofline
+dry-run.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+
+from . import ref as _ref
+
+_USE_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def use_pallas() -> bool:
+    return _USE_PALLAS
+
+
+def searchsorted_segments(values, lo, hi, queries, n_iter: int,
+                          unroll: bool = False):
+    if _USE_PALLAS:
+        from .searchsorted import searchsorted_segments_pallas
+        return searchsorted_segments_pallas(values, lo, hi, queries,
+                                            n_iter=n_iter,
+                                            interpret=_INTERPRET)
+    return _ref.searchsorted_segments_ref(values, lo, hi, queries,
+                                          n_iter=n_iter, unroll=unroll)
+
+
+def intersect_count(a, a_len, b, b_len):
+    if _USE_PALLAS:
+        from .intersect import intersect_count_pallas
+        return intersect_count_pallas(a, a_len, b, b_len,
+                                      interpret=_INTERPRET)
+    return _ref.intersect_count_ref(a, a_len, b, b_len)
+
+
+def flash_attention(q, k, v, causal: bool = True, scale=None):
+    if _USE_PALLAS:
+        from .flash_attention import flash_attention_pallas
+        return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                      interpret=_INTERPRET)
+    return _ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)

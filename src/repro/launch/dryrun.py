@@ -1,0 +1,162 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import: jax locks the
+# device count at first initialization.  This module is the ONLY place
+# that forces 512 placeholder devices (the dry-run contract).
+
+import argparse            # noqa: E402
+import json                # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+
+import jax                 # noqa: E402
+
+import repro               # noqa: E402  (enables x64)
+from repro.configs import ARCHS                    # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import roofline_terms    # noqa: E402
+
+
+def _compile_cell(cell, mesh):
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=getattr(cell, "donate", ()))
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    from repro.launch.roofline import collective_bytes
+    return {
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                  None),
+        },
+        "cost": {k: v for k, v in (cost or {}).items()
+                 if isinstance(v, (int, float))},
+        "coll": collective_bytes(hlo),
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str) -> dict:
+    arch = ARCHS[arch_id]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips}
+    fname = os.path.join(out_dir, f"{arch_id}__{shape_name}__"
+                                  f"{mesh_name}.json")
+    cell = arch.cell(shape_name, mesh)
+    if cell.skip:
+        rec["status"] = "skipped"
+        rec["reason"] = cell.skip
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    full = _compile_cell(cell, mesh)
+    rec.update({"status": "ok", "kind": cell.kind, "note": cell.note,
+                **{k: full[k] for k in
+                   ("lower_s", "compile_s", "memory")},
+                "cost_raw": full["cost"], "coll_raw": full["coll"]})
+    cost, coll = full["cost"], full["coll"]
+    if cell.probe_builder is not None and cell.n_scan >= 2:
+        # scan bodies are costed once by XLA: extrapolate from L=1,2
+        p1 = _compile_cell(cell.probe_builder(1), mesh)
+        p2 = _compile_cell(cell.probe_builder(2), mesh)
+        L = cell.n_scan
+        # clamp at the L=1 cost: a one-off op in the L=1 program can make
+        # the per-layer marginal negative for a category, which must not
+        # extrapolate below zero
+        cost = {k: max(0.0, p1["cost"].get(k, 0.0)
+                       + (L - 1) * (p2["cost"].get(k, 0.0)
+                                    - p1["cost"].get(k, 0.0)))
+                for k in set(p1["cost"]) | set(p2["cost"])}
+        coll = {k: max(0, p1["coll"].get(k, 0)
+                       + (L - 1) * (p2["coll"].get(k, 0)
+                                    - p1["coll"].get(k, 0)))
+                for k in set(p1["coll"]) | set(p2["coll"])}
+        rec["cost_probe"] = {"L1": p1["cost"], "L2": p2["cost"],
+                             "n_scan": L}
+    rec["cost"] = cost
+    rec["coll"] = coll
+    rl = roofline_terms(cost, "", chips, model_flops=cell.model_flops,
+                        coll_override=coll)
+    rec["roofline"] = rl.to_dict()
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = list(ARCHS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    results = []
+    for arch_id in archs:
+        arch = ARCHS[arch_id]
+        shapes = (list(arch.shapes) if args.shape == "all"
+                  else [s for s in args.shape.split(",")
+                        if s in arch.shapes])
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                fname = os.path.join(
+                    args.out,
+                    f"{arch_id}__{shape_name}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"[skip existing] {fname}")
+                    continue
+                tag = f"{arch_id} x {shape_name} x {mesh_name}"
+                try:
+                    rec = run_cell(arch_id, shape_name, multi, args.out)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch_id, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    with open(fname, "w") as f:
+                        json.dump(rec, f, indent=1)
+                results.append(rec)
+                if rec["status"] == "ok":
+                    rl = rec["roofline"]
+                    print(f"[ok] {tag}: compile {rec['compile_s']}s "
+                          f"flops/chip {rl['flops_per_chip']:.3g} "
+                          f"bottleneck {rl['bottleneck']} "
+                          f"(c={rl['t_compute']:.2e}s m={rl['t_memory']:.2e}s "
+                          f"x={rl['t_collective']:.2e}s) "
+                          f"useful={rl['useful_ratio']:.2f}")
+                elif rec["status"] == "skipped":
+                    print(f"[skipped] {tag}: {rec['reason']}")
+                else:
+                    print(f"[ERROR] {tag}: {rec['error']}")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

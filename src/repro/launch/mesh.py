@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module must never
+touch jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+initialization; everything else sees the real device count).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Best-effort mesh from the actually available devices (elastic path:
+    tests run with 8 host devices; the container default is 1)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    data = data if data is not None else n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes over which the batch is sharded (pod composes with data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,110 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (seconds), per (arch × shape × mesh):
+    compute    = per-chip HLO FLOPs / 197 TF/s (bf16 peak, v5e)
+    memory     = per-chip HLO bytes accessed / 819 GB/s HBM
+    collective = Σ collective-op operand bytes / (chips × 50 GB/s link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the partitioned,
+per-device module).  Collective bytes are not in cost_analysis: the
+post-optimization HLO text is scanned and operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+are summed.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12        # bf16 / chip (TPU v5e-class)
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective-kind summed operand bytes from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if " = " not in stripped:
+            continue
+        rhs = stripped.split(" = ", 1)[1]
+        kind = None
+        for k in _COLLECTIVES:
+            # op name appears right after the result shape
+            if re.search(rf"\b{k}(-start|-done)?\(", rhs):
+                kind = k
+                break
+        if kind is None:
+            continue
+        if f"{kind}-done(" in rhs:
+            continue  # paired with -start; avoid double count
+        # operand shapes are inside the call parens
+        call = rhs.split("(", 1)[1]
+        shapes = _SHAPE_RE.findall(call)
+        if not shapes:
+            # operands referenced by name only: fall back to result shape
+            shapes = _SHAPE_RE.findall(rhs.split(" ", 1)[0])
+        total = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        out[kind] += total
+        counts[kind] += 1
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts}
+
+
+@dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_total: float
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+    coll_detail: dict
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(cost: dict, hlo_text: str, chips: int,
+                   model_flops: float = 0.0,
+                   coll_override: dict | None = None) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = (coll_override if coll_override is not None
+            else collective_bytes(hlo_text))
+    cb = float(sum(v for k, v in coll.items() if not k.startswith("n_")))
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = cb / (chips * LINK_BW)
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    total_flops = flops * chips
+    useful = model_flops / total_flops if total_flops else 0.0
+    return Roofline(flops, byts, cb, chips, t_c, t_m, t_x, bottleneck,
+                    model_flops, useful, coll)

@@ -1,0 +1,90 @@
+"""Shared layer primitives: norms, RoPE, activations, initializers.
+
+Explicit dtypes throughout (x64 is enabled package-wide for the join
+engines; model math stays bf16/f32 by construction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normal_init(key, shape, stddev: float = 0.02, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, dtype=jnp.float32)
+            * stddev).astype(dtype)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array | None = None,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return lambda x, p: rmsnorm(x, p["scale"])
+    if kind == "layernorm":
+        return lambda x, p: layernorm(x, p["scale"], p.get("bias"))
+    raise ValueError(kind)
+
+
+def act_fn(kind: str):
+    return {"gelu": jax.nn.gelu, "silu": jax.nn.silu,
+            "relu": jax.nn.relu}[kind]
+
+
+# -- rotary position embedding ----------------------------------------------
+
+def rope_frequencies(d_rot: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, dtype=jnp.float32)
+                            / d_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, rot_frac: float = 1.0,
+               theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding on the leading ``rot_frac`` of head dims.
+
+    x: (..., T, n_heads, d_head); positions: (..., T).
+    ``rot_frac=0.5`` is ChatGLM's 2D-RoPE convention (rotary on half the
+    head dims, identity on the rest).
+    """
+    d_head = x.shape[-1]
+    d_rot = int(d_head * rot_frac)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    freqs = rope_frequencies(d_rot, theta)                   # (d_rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., T, d/2)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., T, 1, :)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1)
+
+
+def cross_entropy_from_logits(logits: jax.Array, labels: jax.Array,
+                              vocab: int) -> jax.Array:
+    """Per-token CE without materializing a one-hot (fused iota compare)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    lbl = jnp.sum(jnp.where(iota == labels[..., None], lf, 0.0), axis=-1)
+    return lse - lbl

@@ -1,0 +1,99 @@
+"""Graph batch container shared by every GNN.
+
+Message passing over ``jax.ops.segment_sum``/``segment_max`` on an
+edge-index — JAX has no CSR SpMM, so the scatter IS the system (see
+DESIGN.md).  Edges are stored COO (src, dst); for distributed runs the
+edge arrays are sharded over the data axes and partial node aggregates are
+psum-merged (same schedule as the join engine's counting SpMV).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class GraphBatch:
+    """COO graph (optionally a batch of graphs flattened with offsets)."""
+
+    src: Any          # (E,) int32
+    dst: Any          # (E,) int32
+    n_nodes: int
+    node_feat: Any = None       # (N, F)
+    edge_feat: Any = None       # (E, Fe)
+    coords: Any = None          # (N, 3) for equivariant models
+    graph_id: Any = None        # (N,) int32 graph membership (batched mols)
+    n_graphs: int = 1
+    labels: Any = None
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+
+def pad_graph(g: GraphBatch, n_nodes: int, n_edges: int) -> GraphBatch:
+    """Pad to static sizes; padded edges self-loop onto a dummy node."""
+    def pad_to(x, n, fill=0):
+        if x is None:
+            return None
+        pad = [(0, n - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+        return np.pad(np.asarray(x), pad, constant_values=fill)
+
+    dummy = n_nodes - 1
+    src = pad_to(g.src, n_edges, dummy)
+    dst = pad_to(g.dst, n_edges, dummy)
+    return GraphBatch(
+        src=src, dst=dst, n_nodes=n_nodes,
+        node_feat=pad_to(g.node_feat, n_nodes),
+        edge_feat=pad_to(g.edge_feat, n_edges),
+        coords=pad_to(g.coords, n_nodes),
+        graph_id=pad_to(g.graph_id, n_nodes, g.n_graphs - 1),
+        n_graphs=g.n_graphs, labels=g.labels)
+
+
+def random_graph_batch(n_nodes: int, n_edges: int, d_feat: int,
+                       seed: int = 0, coords: bool = False,
+                       d_edge: int = 0, n_graphs: int = 1,
+                       n_classes: int = 8) -> GraphBatch:
+    """Deterministic synthetic graph batch (symmetrized COO)."""
+    rng = np.random.default_rng(seed)
+    half = n_edges // 2
+    s = rng.integers(0, n_nodes, half).astype(np.int32)
+    d = rng.integers(0, n_nodes, half).astype(np.int32)
+    src = np.concatenate([s, d])
+    dst = np.concatenate([d, s])
+    g = GraphBatch(
+        src=src, dst=dst, n_nodes=n_nodes,
+        node_feat=rng.standard_normal((n_nodes, d_feat)).astype(np.float32),
+        edge_feat=(rng.standard_normal((src.shape[0], d_edge))
+                   .astype(np.float32) if d_edge else None),
+        coords=(rng.standard_normal((n_nodes, 3)).astype(np.float32)
+                if coords else None),
+        graph_id=np.sort(rng.integers(0, n_graphs, n_nodes)
+                         ).astype(np.int32),
+        n_graphs=n_graphs,
+        labels=rng.integers(0, n_classes, n_nodes).astype(np.int32))
+    return g
+
+
+def scatter_sum(msg, dst, n_nodes: int):
+    return jax.ops.segment_sum(msg, dst, num_segments=n_nodes)
+
+
+def scatter_max(msg, dst, n_nodes: int):
+    return jax.ops.segment_max(msg, dst, num_segments=n_nodes)
+
+
+def scatter_min(msg, dst, n_nodes: int):
+    return -jax.ops.segment_max(-msg, dst, num_segments=n_nodes)
+
+
+def scatter_mean(msg, dst, n_nodes: int, eps: float = 1e-9):
+    s = scatter_sum(msg, dst, n_nodes)
+    cnt = jax.ops.segment_sum(jnp.ones_like(msg[..., :1]), dst,
+                              num_segments=n_nodes)
+    return s / (cnt + eps)

@@ -1,0 +1,255 @@
+"""MACE — higher-order equivariant message passing [arXiv:2206.07697].
+
+Implementation notes (hardware adaptation, see DESIGN.md):
+  * node states are real-spherical-harmonic irreps up to l_max=2 packed as
+    a dense (N, C, 9) tensor — TPU-friendly contiguous channels instead of
+    e3nn's ragged irrep lists;
+  * the symmetric product basis (correlation order 3) is built by iterated
+    pairwise coupling with the *real Gaunt tensor* G[ab,c] = ∫ Y_a Y_b Y_c dΩ,
+    computed **exactly** at import time by a Gauss-Legendre × uniform-φ
+    spherical quadrature (exact for the ≤ degree-6 integrands involved);
+    intermediate irreps are capped at l ≤ 2 (MACE's own practice for its
+    message irreps);
+  * radial basis: 8 Gaussian RBFs -> MLP -> per-l radial weights.
+
+Energy readout is rotation-invariant (property-tested); l=1 components
+transform equivariantly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...layers.common import normal_init
+from .data import GraphBatch, scatter_sum
+
+N_SH = 9  # (l,m) pairs for l <= 2
+
+
+def real_sph_harm(u: jnp.ndarray) -> jnp.ndarray:
+    """Real orthonormal spherical harmonics l<=2 of unit vectors (E,3)."""
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    c0 = 0.5 * np.sqrt(1.0 / np.pi)
+    c1 = np.sqrt(3.0 / (4 * np.pi))
+    c2a = 0.5 * np.sqrt(15.0 / np.pi)
+    c2b = 0.25 * np.sqrt(5.0 / np.pi)
+    c2c = 0.25 * np.sqrt(15.0 / np.pi)
+    return jnp.stack([
+        jnp.full_like(x, c0),          # (0, 0)
+        c1 * y,                        # (1,-1)
+        c1 * z,                        # (1, 0)
+        c1 * x,                        # (1, 1)
+        c2a * x * y,                   # (2,-2)
+        c2a * y * z,                   # (2,-1)
+        c2b * (3 * z * z - 1.0),       # (2, 0)
+        c2a * x * z,                   # (2, 1)
+        c2c * (x * x - y * y),         # (2, 2)
+    ], axis=-1)
+
+
+def _real_sph_harm_np(u: np.ndarray) -> np.ndarray:
+    """Pure-numpy twin of :func:`real_sph_harm` (safe inside jit traces)."""
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    c0 = 0.5 * np.sqrt(1.0 / np.pi)
+    c1 = np.sqrt(3.0 / (4 * np.pi))
+    c2a = 0.5 * np.sqrt(15.0 / np.pi)
+    c2b = 0.25 * np.sqrt(5.0 / np.pi)
+    c2c = 0.25 * np.sqrt(15.0 / np.pi)
+    return np.stack([
+        np.full_like(x, c0), c1 * y, c1 * z, c1 * x,
+        c2a * x * y, c2a * y * z, c2b * (3 * z * z - 1.0),
+        c2a * x * z, c2c * (x * x - y * y)], axis=-1)
+
+
+@lru_cache(maxsize=1)
+def gaunt_tensor() -> np.ndarray:
+    """G[a, b, c] = ∫ Y_a Y_b Y_c dΩ, exact via GL(8) × 16-pt trapezoid."""
+    nodes, weights = np.polynomial.legendre.leggauss(8)
+    nphi = 16
+    phi = 2 * np.pi * np.arange(nphi) / nphi
+    u, p = np.meshgrid(nodes, phi, indexing="ij")       # (8, 16)
+    w = np.repeat(weights[:, None], nphi, 1) * (2 * np.pi / nphi)
+    st = np.sqrt(1 - u ** 2)
+    pts = np.stack([st * np.cos(p), st * np.sin(p), u], axis=-1)
+    ys = _real_sph_harm_np(pts.reshape(-1, 3)).reshape(8, nphi, N_SH)
+    g = np.einsum("ij,ija,ijb,ijc->abc", w, ys, ys, ys)
+    g[np.abs(g) < 1e-12] = 0.0
+    return g
+
+
+L_OF = np.array([0, 1, 1, 1, 2, 2, 2, 2, 2])  # l of each SH slot
+
+
+@dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128      # channels C
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    d_in: int = 16
+    r_cut: float = 3.0
+    n_out: int = 1
+    # §Perf (see EXPERIMENTS.md): 'outer' scatters the (E, C, 9) message
+    # outer product (baseline); 'loop' runs 9 per-m segment-sums and never
+    # materializes it.  bf16 halves message/coupling traffic (f32
+    # accumulation).  couple_chunks splits the Gaunt couplings over node
+    # chunks to bound the (chunk, C, 81) intermediate.
+    a_basis_mode: str = "outer"
+    compute_bf16: bool = False
+    couple_chunks: int = 1
+    # shard the (node-local) Gaunt couplings over the idle model axis
+    shard_couple: bool = False
+    remat: bool = False   # recompute message products in backward
+
+
+def init_mace(key, cfg: MACEConfig):
+    c = cfg.d_hidden
+    ks = iter(jax.random.split(key, 6 + 6 * cfg.n_layers))
+    p = {"enc": normal_init(next(ks), (cfg.d_in, c)), "layers": []}
+    for _ in range(cfg.n_layers):
+        p["layers"].append({
+            # radial: n_rbf -> hidden -> one weight per l
+            "rad_w1": normal_init(next(ks), (cfg.n_rbf, 32)),
+            "rad_w2": normal_init(next(ks), (32, 3)),
+            "w_msg": normal_init(next(ks), (c, c)),
+            # channel mixing per correlation order x l
+            "w_B": normal_init(next(ks), (cfg.correlation, 3, c, c),
+                               stddev=0.05),
+            "w_h": normal_init(next(ks), (c, c)),
+        })
+    p["readout"] = {
+        "w1": normal_init(next(ks), (c, c)),
+        "w2": normal_init(next(ks), (c, cfg.n_out)),
+    }
+    return p
+
+
+def _rbf(r: jnp.ndarray, n: int, r_cut: float) -> jnp.ndarray:
+    centers = jnp.linspace(0.0, r_cut, n)
+    gamma = (n / r_cut) ** 2
+    return jnp.exp(-gamma * (r[:, None] - centers[None, :]) ** 2)
+
+
+def _couple(a: jnp.ndarray, b: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """(N,C,9) x (N,C,9) -> (N,C,9) via the Gaunt tensor."""
+    return jnp.einsum("ncp,ncq,pqr->ncr", a, b, g)
+
+
+def _maybe_shard(x, spec):
+    """with_sharding_constraint iff an ambient mesh exists (dry-run);
+    no-op in single-device tests."""
+    import jax.sharding as jsh
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, jsh.PartitionSpec(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def mace_forward(params, g: GraphBatch, cfg: MACEConfig):
+    n = g.n_nodes
+    src = jnp.asarray(g.src, jnp.int32)
+    dst = jnp.asarray(g.dst, jnp.int32)
+    x = jnp.asarray(g.coords, jnp.float32)
+    gaunt = jnp.asarray(gaunt_tensor(), jnp.float32)
+    l_of = jnp.asarray(L_OF)
+
+    # initial node irreps: invariant channel in l=0, zero elsewhere
+    h0 = jnp.asarray(g.node_feat, jnp.float32) @ params["enc"]   # (N, C)
+    state = jnp.zeros((n, cfg.d_hidden, N_SH), jnp.float32)
+    state = state.at[:, :, 0].set(h0)
+    if cfg.shard_couple:
+        state = _maybe_shard(state, ("model", None, None))
+
+    diff = x[dst] - x[src]
+    r = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)
+    unit = diff / r[:, None]
+    ylm = real_sph_harm(unit)                                    # (E, 9)
+    rbf = _rbf(r, cfg.n_rbf, cfg.r_cut)                          # (E, nrbf)
+
+    cdt = jnp.bfloat16 if cfg.compute_bf16 else jnp.float32
+
+    def layer_fn(state, lp):
+        rad = jax.nn.silu(rbf @ lp["rad_w1"]) @ lp["rad_w2"]     # (E, 3)
+        edge_basis = (ylm * rad[:, l_of]).astype(cdt)            # (E, 9)
+        # A-basis: invariant message channels spread over edge irreps
+        msg = ((state[:, :, 0] @ lp["w_msg"])[src]).astype(cdt)  # (E, C)
+        if cfg.a_basis_mode == "loop":
+            # never materialize the (E, C, 9) outer product: one
+            # f32-accumulated segment-sum per spherical component
+            ams = []
+            for m in range(N_SH):
+                am = scatter_sum((msg * edge_basis[:, m:m + 1])
+                                 .astype(jnp.float32), dst, n)
+                if cfg.shard_couple:  # keep node tensors model-sharded
+                    am = _maybe_shard(am, ("model", None))
+                ams.append(am)
+            a = jnp.stack(ams, axis=-1)                          # (N, C, 9)
+        else:
+            a = scatter_sum(
+                (msg[:, :, None] * edge_basis[:, None, :])
+                .astype(jnp.float32), dst, n)                    # (N, C, 9)
+        # product basis, correlation order 1..3 (iterated Gaunt coupling)
+        a = a.astype(cdt)
+        if cfg.shard_couple:
+            # node-local math: the model axis contributes HBM bandwidth
+            a = _maybe_shard(a, ("model", None, None))
+        if cfg.couple_chunks > 1:
+            k = cfg.couple_chunks
+            pad = (-n) % k
+            a_p = jnp.pad(a, ((0, pad), (0, 0), (0, 0)))
+            parts = []
+            for i in range(k):
+                blk = a_p[i * (n + pad) // k: (i + 1) * (n + pad) // k]
+                bs_blk = [blk]
+                cur = blk
+                for _ in range(cfg.correlation - 1):
+                    cur = _couple(cur, blk, gaunt.astype(cdt))
+                    bs_blk.append(cur)
+                parts.append(jnp.stack(bs_blk))
+            bs = list(jnp.concatenate(parts, axis=1)[:, :n])
+        else:
+            bs = [a]
+            cur = a
+            for _ in range(cfg.correlation - 1):
+                cur = _couple(cur, a, gaunt.astype(cdt))
+                bs.append(cur)
+        bs = [b.astype(jnp.float32) for b in bs]
+        m = jnp.zeros_like(a)
+        for order, b in enumerate(bs):
+            for l in range(3):
+                sel = (l_of == l)
+                mixed = jnp.einsum("ncp,cd->ndp", b * sel[None, None, :],
+                                   lp["w_B"][order, l])
+                m = m + mixed
+        # update: residual on the full irrep state; invariant mix
+        state = state + m
+        state = state.at[:, :, 0].add(state[:, :, 0] @ lp["w_h"])
+        return state
+
+    for lp in params["layers"]:
+        fn = jax.checkpoint(layer_fn) if cfg.remat else layer_fn
+        state = fn(state, lp)
+    return state
+
+
+def mace_energy(params, g: GraphBatch, cfg: MACEConfig):
+    state = mace_forward(params, g, cfg)
+    inv = state[:, :, 0]                                         # (N, C)
+    out = jax.nn.silu(inv @ params["readout"]["w1"])
+    out = out @ params["readout"]["w2"]                          # (N, n_out)
+    gid = jnp.asarray(g.graph_id if g.graph_id is not None
+                      else jnp.zeros(g.n_nodes, jnp.int32), jnp.int32)
+    return jax.ops.segment_sum(out, gid, num_segments=g.n_graphs)
+
+
+def mace_loss(params, g: GraphBatch, cfg: MACEConfig):
+    e = mace_energy(params, g, cfg)
+    target = jnp.asarray(g.labels, jnp.float32).reshape(e.shape[0], -1)
+    return jnp.mean((e - target[:, : e.shape[1]]) ** 2)

@@ -1,0 +1,507 @@
+"""Decoder-only transformer family (dense + MoE), TPU-pod-shardable.
+
+Design points:
+  * params stacked ``(L, ...)`` + ``lax.scan`` over layers — compact HLO,
+    bounded compile time at 512 devices, remat per layer;
+  * GQA attention with RoPE (full or ChatGLM-style half-dim rotary); KV
+    heads replicate over excess model shards;
+  * Megatron-style TP via sharding constraints; optional FSDP (params
+    sharded over data on a non-layer dim) and sequence-parallel residual
+    stream for the 100B-class configs;
+  * MoE blocks via ``layers.moe`` (shard_map EP/TP) with a local fallback
+    when no mesh is present (CPU smoke tests);
+  * decode with a KV cache sharded over (data, heads-or-seq); prefill
+    returns the populated cache.
+
+Everything is explicit-dtype (bf16 activations / f32 router & softmax).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..kernels import ops as kops
+from ..layers.common import (act_fn, apply_rope, cross_entropy_from_logits,
+                             make_norm, normal_init)
+from ..layers.moe import (MoEConfig, _dispatch_compute, init_moe_params,
+                          moe_ffn, moe_param_specs)
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int | None = None
+    rope_frac: float = 1.0
+    rope_theta: float = 10_000.0
+    act: str = "silu"
+    norm: str = "rmsnorm"
+    use_bias: bool = False
+    tie_embeddings: bool = True
+    moe: MoEConfig | None = None
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    fsdp: bool = False          # shard params over 'data' too (100B class)
+    seq_shard: bool = False     # sequence-parallel residual stream
+    attn_head_shard: bool = True  # explicit head-sharding wsc on q
+    loss_seq_chunk: int = 0     # chunk the LM head over sequence
+    max_cache_len: int = 32768
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the embedding table
+        row-shards on any mesh (padded logits are masked in the loss)."""
+        if self.vocab_size % 256 == 0:
+            return self.vocab_size
+        return ((self.vocab_size + 255) // 256) * 256
+
+    @property
+    def n_params(self) -> int:
+        d, l, v = self.d_model, self.n_layers, self.vocab_size
+        hq, hkv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * hq * dh * 2 + d * hkv * dh * 2
+        if self.moe is None:
+            ffn = 3 * d * self.d_ff
+        else:
+            ffn = (3 * d * self.moe.d_ff_expert * self.moe.n_experts
+                   + d * self.moe.n_experts
+                   + 3 * d * self.moe.d_ff_expert * self.moe.n_shared_experts)
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ffn + 2 * d) + emb + d
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.n_params
+        d, l = self.d_model, self.n_layers
+        hq, hkv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * hq * dh * 2 + d * hkv * dh * 2
+        ffn = (3 * d * self.moe.d_ff_expert
+               * (self.moe.top_k + self.moe.n_shared_experts)
+               + d * self.moe.n_experts)
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ffn + 2 * d) + emb + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: TransformerConfig):
+    l, d, v = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = iter(jax.random.split(key, 16))
+    dt = cfg.dtype
+    p = {
+        "embed": normal_init(next(ks), (v, d), dtype=dt),
+        "ln1": normal_init(next(ks), (l, d), stddev=0.0, dtype=jnp.float32)
+        + 1.0,
+        "wq": normal_init(next(ks), (l, d, hq * dh), dtype=dt),
+        "wk": normal_init(next(ks), (l, d, hkv * dh), dtype=dt),
+        "wv": normal_init(next(ks), (l, d, hkv * dh), dtype=dt),
+        "wo": normal_init(next(ks), (l, hq * dh, d), dtype=dt),
+        "ln2": normal_init(next(ks), (l, d), stddev=0.0, dtype=jnp.float32)
+        + 1.0,
+        "ln_f": normal_init(next(ks), (d,), stddev=0.0, dtype=jnp.float32)
+        + 1.0,
+    }
+    if cfg.moe is None:
+        p["w_gate"] = normal_init(next(ks), (l, d, cfg.d_ff), dtype=dt)
+        p["w_up"] = normal_init(next(ks), (l, d, cfg.d_ff), dtype=dt)
+        p["w_down"] = normal_init(next(ks), (l, cfg.d_ff, d), dtype=dt)
+    else:
+        p["moe"] = init_moe_params(next(ks), d, cfg.moe, l, dtype=dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = normal_init(next(ks), (d, v), dtype=dt)
+    return p
+
+
+def param_specs(cfg: TransformerConfig) -> dict:
+    """PartitionSpecs (logical: 'data' = FSDP shard dim, 'model' = TP)."""
+    dp = "data" if cfg.fsdp else None
+    specs = {
+        "embed": P("model", dp),
+        "ln1": P(None, None),
+        "wq": P(None, dp, "model"),
+        "wk": P(None, dp, None),   # kv heads may not divide the TP axis
+        "wv": P(None, dp, None),
+        "wo": P(None, "model", dp),
+        "ln2": P(None, None),
+        "ln_f": P(None),
+    }
+    if cfg.moe is None:
+        specs["w_gate"] = P(None, dp, "model")
+        specs["w_up"] = P(None, dp, "model")
+        specs["w_down"] = P(None, "model", dp)
+    else:
+        specs["moe"] = moe_param_specs(cfg.moe, cfg.fsdp)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(dp, "model")
+    return specs
+
+
+def _dataxes(mesh):
+    if mesh is None:
+        return ()
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _wsc(x, spec, mesh):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def _head_axis(cfg: TransformerConfig, mesh):
+    """'model' when the query-head count divides the TP axis, else None
+    (granite's 24 heads on a 16-way axis fall back to flat-dim sharding)."""
+    if mesh is None:
+        return None
+    return "model" if cfg.n_heads % mesh.shape["model"] == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _attention(x, lp, cfg: TransformerConfig, mesh, positions):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dax = _dataxes(mesh)
+    q = jnp.einsum("bsd,dh->bsh", x, lp["wq"],
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    k = jnp.einsum("bsd,dh->bsh", x, lp["wk"],
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    v = jnp.einsum("bsd,dh->bsh", x, lp["wv"],
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_frac, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_frac, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)
+    if cfg.attn_head_shard:
+        q = _wsc(q, P(dax, _head_axis(cfg, mesh), None, None), mesh)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    o = kops.flash_attention(q, k, v, causal=True)            # (B,Hq,S,Dh)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, lp["wo"],
+                     preferred_element_type=jnp.float32).astype(cfg.dtype)
+    return out, (k, v)
+
+
+def _dense_ffn(x, lp, cfg: TransformerConfig, mesh):
+    g = jnp.einsum("bsd,df->bsf", x, lp["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("bsd,df->bsf", x, lp["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (act_fn(cfg.act)(g) * u).astype(cfg.dtype)
+    h = _wsc(h, P(_dataxes(mesh), None, "model"), mesh)
+    out = jnp.einsum("bsf,fd->bsd", h, lp["w_down"],
+                     preferred_element_type=jnp.float32).astype(cfg.dtype)
+    return out
+
+
+def _moe_ffn_local(x, lp, cfg: TransformerConfig):
+    """Single-device MoE fallback (smoke tests, no mesh)."""
+    b, s, d = x.shape
+    t = b * s
+    capacity = int(cfg.moe.capacity_factor * t * cfg.moe.top_k
+                   / cfg.moe.n_experts) + 1
+    out, aux = _dispatch_compute(
+        x.reshape(t, d), lp["router"], lp["w_gate"], lp["w_up"],
+        lp["w_down"], cfg=cfg.moe, e_off=0,
+        n_total_experts=cfg.moe.n_experts, act=cfg.act, capacity=capacity)
+    y = out.reshape(b, s, d).astype(cfg.dtype)
+    if cfg.moe.n_shared_experts:
+        g = act_fn(cfg.act)(jnp.einsum("bsd,df->bsf", x, lp["sh_gate"],
+                            preferred_element_type=jnp.float32))
+        u = jnp.einsum("bsd,df->bsf", x, lp["sh_up"],
+                       preferred_element_type=jnp.float32)
+        sh = jnp.einsum("bsf,fd->bsd", (g * u).astype(x.dtype),
+                        lp["sh_down"], preferred_element_type=jnp.float32)
+        y = y + sh.astype(y.dtype)
+    return y, aux
+
+
+def _layer(x, lp, cfg: TransformerConfig, mesh, positions):
+    dax = _dataxes(mesh)
+    norm = make_norm(cfg.norm)
+    res_spec = (P(dax, "model", None) if cfg.seq_shard
+                else P(dax, None, None))
+    x = _wsc(x, res_spec, mesh)
+    h = norm(x, {"scale": lp["ln1"]})
+    h = _wsc(h, P(dax, None, None), mesh)
+    attn_out, _ = _attention(h, lp, cfg, mesh, positions)
+    x = x + _wsc(attn_out, res_spec, mesh)
+    h = norm(x, {"scale": lp["ln2"]})
+    h = _wsc(h, P(dax, None, None), mesh)
+    if cfg.moe is None:
+        ff = _dense_ffn(h, lp, cfg, mesh)
+        aux = jnp.zeros((), jnp.float32)
+    elif mesh is None:
+        ff, aux = _moe_ffn_local(h, lp["moe"], cfg)
+    else:
+        ff, aux = moe_ffn(h, lp["moe"], cfg.moe, mesh, act=cfg.act,
+                          dtype=cfg.dtype)
+    x = x + _wsc(ff, res_spec, mesh)
+    return x, aux
+
+
+def _layer_params(p, cfg: TransformerConfig):
+    keys = ["ln1", "wq", "wk", "wv", "wo", "ln2"]
+    if cfg.moe is None:
+        keys += ["w_gate", "w_up", "w_down"]
+        return {k: p[k] for k in keys}
+    lp = {k: p[k] for k in keys}
+    lp["moe"] = p["moe"]
+    return lp
+
+
+def forward(params, tokens, cfg: TransformerConfig, mesh=None):
+    """Token ids (B, S) -> final hidden states (B, S, d) + mean aux loss."""
+    b, s = tokens.shape
+    dax = _dataxes(mesh)
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = _wsc(x, P(dax, None, None), mesh)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    layer_stack = _layer_params(params, cfg)
+
+    def body(x, lp):
+        fn = partial(_layer, cfg=cfg, mesh=mesh, positions=positions)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x, aux = fn(x, lp)
+        return x, aux
+
+    # n_layers <= 2 unrolls: exact per-layer costs for the dry-run probes
+    # (XLA cost analysis counts a scan body once); big stacks scan.
+    if cfg.n_layers > 2:
+        x, auxs = jax.lax.scan(body, x, layer_stack)
+        aux = auxs.mean()
+    else:
+        auxs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], layer_stack)
+            x, a = body(x, lp)
+            auxs.append(a)
+        aux = jnp.stack(auxs).mean()
+    x = make_norm(cfg.norm)(x, {"scale": params["ln_f"]})
+    return x, aux
+
+
+def _lm_logits(x, params, cfg: TransformerConfig, mesh):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cfg.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, head,
+                        preferred_element_type=jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(iota < cfg.vocab_size, logits, -1e30)
+    return _wsc(logits, P(_dataxes(mesh), None, "model"), mesh)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, mesh=None):
+    tokens, labels = batch["tokens"], batch["labels"]
+    x, aux = forward(params, tokens, cfg, mesh)
+    s = x.shape[1]
+    chunk = cfg.loss_seq_chunk or s
+    n_chunks = max(1, s // chunk)
+    if n_chunks > 1:
+        xc = x.reshape(x.shape[0], n_chunks, chunk, x.shape[2])
+        lc = labels.reshape(labels.shape[0], n_chunks, chunk)
+
+        def per_chunk(c):
+            xi, li = c
+            logits = _lm_logits(xi, params, cfg, mesh)
+            return cross_entropy_from_logits(logits, li, cfg.vocab_size)
+
+        ce = jax.lax.map(per_chunk, (xc.transpose(1, 0, 2, 3),
+                                     lc.transpose(1, 0, 2)))
+        ce = ce.transpose(1, 0, 2).reshape(labels.shape)
+    else:
+        logits = _lm_logits(x, params, cfg, mesh)
+        ce = cross_entropy_from_logits(logits, labels, cfg.vocab_size)
+    loss = ce.mean() + 0.01 * aux
+    return loss.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int | None = None):
+    ml = max_len or cfg.max_cache_len
+    hkv, dh, l = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    return {
+        "k": jnp.zeros((l, batch, hkv, ml, dh), cfg.dtype),
+        "v": jnp.zeros((l, batch, hkv, ml, dh), cfg.dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: TransformerConfig, mesh) -> dict:
+    """KV cache: batch over (pod,data); heads over model when divisible,
+    else the sequence dim (flash-decoding split-K sharding)."""
+    dax = _dataxes(mesh)
+    if mesh is not None and cfg.n_kv_heads % mesh.shape["model"] == 0:
+        kv = P(None, dax, "model", None, None)
+    else:
+        kv = P(None, dax, None, "model", None)
+    return {"k": kv, "v": kv, "len": P()}
+
+
+def prefill(params, tokens, cfg: TransformerConfig, mesh=None,
+            max_len: int | None = None):
+    """Run the prompt, return (cache, last-position logits)."""
+    b, s = tokens.shape
+    ml = max_len or cfg.max_cache_len
+    dax = _dataxes(mesh)
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = _wsc(x, P(dax, None, None), mesh)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    layer_stack = _layer_params(params, cfg)
+
+    def body(x, lp):
+        fn = partial(_layer_with_kv, cfg=cfg, mesh=mesh, positions=positions,
+                     max_len=ml)
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        x, kv = fn(x, lp)
+        return x, kv
+
+    if cfg.n_layers > 2:
+        x, kvs = jax.lax.scan(body, x, layer_stack)
+    else:
+        ks_, vs_ = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], layer_stack)
+            x, (k_, v_) = body(x, lp)
+            ks_.append(k_)
+            vs_.append(v_)
+        kvs = (jnp.stack(ks_), jnp.stack(vs_))
+    x = make_norm(cfg.norm)(x, {"scale": params["ln_f"]})
+    logits = _lm_logits(x[:, -1:, :], params, cfg, mesh)
+    cache = {"k": kvs[0], "v": kvs[1],
+             "len": jnp.array(s, jnp.int32)}
+    return cache, logits
+
+
+def _layer_with_kv(x, lp, cfg, mesh, positions, max_len):
+    dax = _dataxes(mesh)
+    norm = make_norm(cfg.norm)
+    h = norm(x, {"scale": lp["ln1"]})
+    attn_out, (k, v) = _attention(h, lp, cfg, mesh, positions)
+    x = x + attn_out
+    h = norm(x, {"scale": lp["ln2"]})
+    if cfg.moe is None:
+        ff = _dense_ffn(h, lp, cfg, mesh)
+    elif mesh is None:
+        ff, _ = _moe_ffn_local(h, lp["moe"], cfg)
+    else:
+        ff, _ = moe_ffn(h, lp["moe"], cfg.moe, mesh, act=cfg.act,
+                        dtype=cfg.dtype)
+    x = x + ff
+    s = k.shape[2]
+    pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0)]
+    return x, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig, mesh=None):
+    """One token for every sequence: tokens (B, 1) -> (logits, new cache)."""
+    b = tokens.shape[0]
+    dax = _dataxes(mesh)
+    x = params["embed"][tokens].astype(cfg.dtype)
+    pos = jnp.broadcast_to(cache["len"][None], (b, 1)).astype(jnp.int32)
+    layer_stack = _layer_params(params, cfg)
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def body(carry, xs):
+        x = carry
+        lp, kc, vc = xs
+        norm = make_norm(cfg.norm)
+        h = norm(x, {"scale": lp["ln1"]})
+        q = jnp.einsum("bsd,dh->bsh", h, lp["wq"],
+                       preferred_element_type=jnp.float32).astype(cfg.dtype)
+        k = jnp.einsum("bsd,dh->bsh", h, lp["wk"],
+                       preferred_element_type=jnp.float32).astype(cfg.dtype)
+        v = jnp.einsum("bsd,dh->bsh", h, lp["wv"],
+                       preferred_element_type=jnp.float32).astype(cfg.dtype)
+        q = apply_rope(q.reshape(b, 1, hq, dh), pos, cfg.rope_frac,
+                       cfg.rope_theta)
+        k = apply_rope(k.reshape(b, 1, hkv, dh), pos, cfg.rope_frac,
+                       cfg.rope_theta)
+        v = v.reshape(b, 1, hkv, dh)
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k.transpose(0, 2, 1, 3), cache["len"], axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v.transpose(0, 2, 1, 3), cache["len"], axis=2)
+        o = _cached_attention(q.transpose(0, 2, 1, 3), kc, vc,
+                              cache["len"] + 1, cfg)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, hq * dh)
+        attn_out = jnp.einsum("bsh,hd->bsd", o, lp["wo"],
+                              preferred_element_type=jnp.float32
+                              ).astype(cfg.dtype)
+        x = x + attn_out
+        h = norm(x, {"scale": lp["ln2"]})
+        if cfg.moe is None:
+            ff = _dense_ffn(h, lp, cfg, mesh)
+        elif mesh is None:
+            ff, _ = _moe_ffn_local(h, lp["moe"], cfg)
+        else:
+            ff, _ = moe_ffn(h, lp["moe"], cfg.moe, mesh, act=cfg.act,
+                            dtype=cfg.dtype)
+        x = x + ff
+        return x, (kc, vc)
+
+    if cfg.n_layers > 2:
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (layer_stack, cache["k"], cache["v"]))
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            xs_i = jax.tree.map(lambda a: a[i],
+                                (layer_stack, cache["k"], cache["v"]))
+            x, (kc, vc) = body(x, xs_i)
+            ks_l.append(kc)
+            vs_l.append(vc)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    x = make_norm(cfg.norm)(x, {"scale": params["ln_f"]})
+    logits = _lm_logits(x, params, cfg, mesh)
+    new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
+    return logits, new_cache
+
+
+def _cached_attention(q, kc, vc, valid_len, cfg: TransformerConfig):
+    """q: (B, Hq, 1, Dh) vs cache (B, Hkv, M, Dh) masked to valid_len."""
+    b, hq, _, dh = q.shape
+    hkv = kc.shape[1]
+    group = hq // hkv
+    m = kc.shape[2]
+    qg = q.reshape(b, hkv, group, dh).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhmd->bhgm", qg, kc.astype(jnp.float32))
+    logits = logits / (dh ** 0.5)
+    mask = jnp.arange(m) < valid_len
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhgm,bhmd->bhgd", p, vc.astype(jnp.float32))
+    return o.reshape(b, hq, 1, dh).astype(cfg.dtype)

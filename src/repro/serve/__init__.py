@@ -1,0 +1,3 @@
+from .query_server import QueryRequest, QueryServer
+
+__all__ = ["QueryRequest", "QueryServer"]

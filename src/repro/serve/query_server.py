@@ -1,0 +1,70 @@
+"""Batched graph-pattern query serving — the paper's workload as a service.
+
+The RDBMS story of the paper is interactive: clients submit pattern
+queries (with per-request node samples / selectivities) against a resident
+graph.  ``QueryServer`` keeps the device-resident CSR trie warm, routes
+each request to the winning engine (auto heuristic from the benchmark
+summary: Minesweeper-analogue for acyclic, hybrid for lollipops, LFTJ for
+cyclic), executes batches of requests, and reports per-request latency —
+the serving analogue of Table 6/7.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import GraphDB, count as engine_count, get_query, pick_engine
+from ..graphs import CSRGraph, node_sample
+
+
+@dataclass
+class QueryRequest:
+    query_name: str
+    selectivity: float | None = None   # regenerate v1/v2 samples at 1/s
+    seed: int = 0
+    engine: str = "auto"
+
+
+@dataclass
+class QueryResult:
+    request: QueryRequest
+    count: int
+    engine: str
+    latency_s: float
+
+
+class QueryServer:
+    def __init__(self, csr: CSRGraph, default_selectivity: float = 10.0):
+        self.csr = csr
+        self.default_selectivity = default_selectivity
+        self._warm: dict = {}
+
+    def _gdb_for(self, selectivity: float, seed: int) -> GraphDB:
+        key = (round(selectivity, 6), seed)
+        if key not in self._warm:
+            unary = {f"v{i}": node_sample(self.csr.n_nodes, selectivity,
+                                          seed=seed * 7 + i)
+                     for i in range(1, 5)}
+            self._warm[key] = GraphDB(self.csr, unary)
+        return self._warm[key]
+
+    def execute(self, req: QueryRequest) -> QueryResult:
+        q = get_query(req.query_name)
+        sel = req.selectivity or self.default_selectivity
+        gdb = self._gdb_for(sel, req.seed)
+        engine = req.engine if req.engine != "auto" else pick_engine(q)
+        t0 = time.time()
+        c = engine_count(q, gdb, engine=engine)
+        return QueryResult(req, c, engine, time.time() - t0)
+
+    def execute_batch(self, reqs: list[QueryRequest]) -> list[QueryResult]:
+        # group by (selectivity, seed) so the device graph stays warm
+        order = sorted(range(len(reqs)),
+                       key=lambda i: (reqs[i].selectivity or 0,
+                                      reqs[i].seed))
+        results: list[QueryResult | None] = [None] * len(reqs)
+        for i in order:
+            results[i] = self.execute(reqs[i])
+        return results  # type: ignore

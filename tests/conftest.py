@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  (enables x64; device count stays at 1 here)
+from repro.core import Database, GraphDB, Relation
+from repro.graphs import node_sample, powerlaw_cluster
+
+
+def make_gdb(n=60, m_per_node=3, seed=0, selectivity=4, n_samples=4):
+    g = powerlaw_cluster(n, m_per_node, seed=seed)
+    unary = {f"v{i}": node_sample(g.n_nodes, selectivity, seed=seed + i)
+             for i in range(1, n_samples + 1)}
+    return GraphDB(g, unary)
+
+
+@pytest.fixture(scope="session")
+def gdb_small():
+    return make_gdb(40, 3, seed=1)
+
+
+@pytest.fixture(scope="session")
+def gdb_medium():
+    return make_gdb(200, 4, seed=2)

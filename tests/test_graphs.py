@@ -1,0 +1,64 @@
+"""Graph substrate vs networkx oracles."""
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphDB, count, get_query
+from repro.graphs import CSRGraph, load_edgelist, save_edgelist
+from repro.graphs.csr import triangle_count_csr
+from repro.graphs.generators import make_snap_like, powerlaw_cluster
+
+
+def test_csr_build_symmetrize_dedup():
+    g = CSRGraph.from_edges([0, 1, 1, 2], [1, 0, 2, 2])
+    # loops dropped, dedup, symmetric
+    assert g.n_edges == 4  # (0,1),(1,0),(1,2),(2,1)
+    np.testing.assert_array_equal(g.neighbors(1), [0, 2])
+
+
+def test_edge_array_is_sorted_relation():
+    g = powerlaw_cluster(100, 3, seed=0)
+    ea = g.edge_array()
+    assert (np.diff(ea[:, 0]) >= 0).all()
+    rel = g.to_relation()
+    assert len(rel) == g.n_edges
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_triangle_count_matches_networkx(seed):
+    G = nx.gnm_random_graph(40, 120, seed=seed)
+    src = np.array([u for u, v in G.edges()] or [0])
+    dst = np.array([v for u, v in G.edges()] or [0])
+    g = CSRGraph.from_edges(src, dst, n_nodes=40)
+    expect = sum(nx.triangles(G).values()) // 3
+    assert triangle_count_csr(g) == expect
+    gdb = GraphDB(g, {})
+    assert count(get_query("3-clique"), gdb, engine="vlftj") == expect
+
+
+def test_io_roundtrip(tmp_path):
+    g = powerlaw_cluster(80, 3, seed=1)
+    p = tmp_path / "edges.txt"
+    save_edgelist(g, str(p))
+    g2 = load_edgelist(str(p))
+    assert g2.n_edges == g.n_edges
+    assert triangle_count_csr(g2) == triangle_count_csr(g)
+
+
+def test_snap_like_sizes():
+    g = make_snap_like("ca-GrQc", scale=0.2)
+    assert g.n_nodes > 500
+    assert g.n_edges > 1000
+
+
+def test_padded_neighbors():
+    g = powerlaw_cluster(50, 3, seed=2)
+    pn, mask = g.padded_neighbors(pad_to=8)
+    assert pn.shape == (50, 8)
+    for v in range(50):
+        nbrs = g.neighbors(v)
+        k = min(8, nbrs.shape[0])
+        np.testing.assert_array_equal(pn[v, :k], nbrs[:k])
+        assert mask[v].sum() == k

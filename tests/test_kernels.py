@@ -1,0 +1,106 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.intersect import intersect_count_pallas
+from repro.kernels.ref import (flash_attention_ref, intersect_count_ref,
+                               searchsorted_segments_ref)
+from repro.kernels.searchsorted import searchsorted_segments_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _sorted_rows(r, width, max_len, domain):
+    lens = RNG.integers(0, max_len + 1, r)
+    arr = np.zeros((r, width), np.int32)
+    for i in range(r):
+        arr[i, :lens[i]] = np.sort(
+            RNG.choice(domain, size=lens[i], replace=False))
+    return arr, lens.astype(np.int32)
+
+
+@pytest.mark.parametrize("m,r,w", [(64, 8, 128), (1000, 16, 128),
+                                   (4096, 32, 256)])
+def test_searchsorted_sweep(m, r, w):
+    vals = np.sort(RNG.integers(0, 4 * m, m)).astype(np.int32)
+    lo = RNG.integers(0, m // 2, (r, 1)).astype(np.int32)
+    hi = (lo + RNG.integers(0, m // 2, (r, 1))).astype(np.int32)
+    q = RNG.integers(0, 4 * m, (r, w)).astype(np.int32)
+    n_iter = int(np.ceil(np.log2(m))) + 1
+    p1, f1 = searchsorted_segments_ref(jnp.asarray(vals), jnp.asarray(lo),
+                                       jnp.asarray(hi), jnp.asarray(q),
+                                       n_iter=n_iter)
+    p2, f2 = searchsorted_segments_pallas(
+        jnp.asarray(vals), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(q), n_iter=n_iter)
+    assert_allclose(np.asarray(p1), np.asarray(p2))
+    assert_allclose(np.asarray(f1), np.asarray(f2))
+
+
+def test_searchsorted_unroll_matches_loop():
+    vals = np.sort(RNG.integers(0, 100, 64)).astype(np.int32)
+    q = RNG.integers(0, 100, (8, 128)).astype(np.int32)
+    lo = np.zeros((8, 1), np.int32)
+    hi = np.full((8, 1), 64, np.int32)
+    a = searchsorted_segments_ref(jnp.asarray(vals), lo, hi,
+                                  jnp.asarray(q), n_iter=8, unroll=False)
+    b = searchsorted_segments_ref(jnp.asarray(vals), lo, hi,
+                                  jnp.asarray(q), n_iter=8, unroll=True)
+    assert_allclose(np.asarray(a[0]), np.asarray(b[0]))
+    assert_allclose(np.asarray(a[1]), np.asarray(b[1]))
+
+
+@pytest.mark.parametrize("r,la,lb", [(8, 128, 128), (16, 256, 384),
+                                     (24, 512, 128)])
+def test_intersect_sweep(r, la, lb):
+    a, alen = _sorted_rows(r, la, la - 5, 4000)
+    b, blen = _sorted_rows(r, lb, lb - 5, 4000)
+    c1 = intersect_count_ref(jnp.asarray(a), jnp.asarray(alen),
+                             jnp.asarray(b), jnp.asarray(blen))
+    c2 = intersect_count_pallas(jnp.asarray(a), jnp.asarray(alen),
+                                jnp.asarray(b), jnp.asarray(blen))
+    assert_allclose(np.asarray(c1), np.asarray(c2))
+    # numpy oracle double-check
+    for i in range(r):
+        expect = np.intersect1d(a[i, :alen[i]], b[i, :blen[i]]).size
+        assert int(np.asarray(c2)[i]) == expect
+
+
+def test_intersect_empty_rows():
+    a = np.zeros((8, 128), np.int32)
+    b = np.zeros((8, 128), np.int32)
+    alen = np.zeros(8, np.int32)
+    blen = np.full(8, 100, np.int32)
+    c = intersect_count_pallas(jnp.asarray(a), jnp.asarray(alen),
+                               jnp.asarray(b), jnp.asarray(blen))
+    assert np.asarray(c).sum() == 0
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(dtype, hq, hkv, causal):
+    b, t, d = 2, 256, 64
+    q = jnp.asarray(RNG.standard_normal((b, hq, t, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, t, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, t, d)), dtype)
+    o1 = flash_attention_ref(q, k, v, causal=causal)
+    o2 = flash_attention_pallas(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert_allclose(np.asarray(o1, np.float32), np.asarray(o2, np.float32),
+                    atol=tol, rtol=tol)
+
+
+def test_flash_attention_decode_shape():
+    """Tq=1 against a longer KV stream (decode step)."""
+    b, hq, hkv, tk, d = 2, 4, 2, 256, 64
+    q = jnp.asarray(RNG.standard_normal((b, hq, 1, d)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, hkv, tk, d)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, hkv, tk, d)), jnp.float32)
+    o1 = flash_attention_ref(q, k, v, causal=True)
+    o2 = flash_attention_pallas(q, k, v, causal=True)
+    assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=2e-5)

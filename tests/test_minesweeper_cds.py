@@ -1,0 +1,83 @@
+"""CDS internals: interval lists, constraints, truncation (Ideas 1-5)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.minesweeper_ref import (CDS, Constraint, IntervalList,
+                                        STAR, _chain_bottom, _generalizes)
+from repro.core.relation import NEG_INF, POS_INF
+
+
+def test_interval_merge_open_semantics():
+    il = IntervalList()
+    il.insert(1, 10)
+    il.insert(10, 20)     # touching open intervals: 10 stays free
+    assert il.next_free(5) == 10
+    assert il.next_free(10) == 10
+    assert il.next_free(11) == 20
+    il.insert(9, 11)      # now 10 is covered -> all merge
+    assert il.ivs == [(1, 20)]
+    assert il.next_free(5) == 20
+
+
+def test_interval_empty_inserts_ignored():
+    il = IntervalList()
+    il.insert(5, 6)   # open (5,6) contains no integer
+    assert il.ivs == []
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 60), st.integers(0, 60)),
+                min_size=1, max_size=25),
+       st.integers(0, 70))
+def test_interval_list_matches_naive(pairs, probe):
+    il = IntervalList()
+    covered = set()
+    for a, b in pairs:
+        l, r = min(a, b), max(a, b)
+        il.insert(l, r)
+        covered |= set(range(l + 1, r))
+    # invariant: sorted, disjoint
+    for (a1, b1), (a2, b2) in zip(il.ivs, il.ivs[1:]):
+        assert b1 <= a2
+    expect = probe
+    while expect in covered:
+        expect += 1
+    assert il.next_free(probe) == expect
+
+
+def test_constraint_matching():
+    c = Constraint((STAR, 7), 2, 3, 9)
+    assert c.matches((0, 7, 5))
+    assert not c.matches((0, 7, 3))   # open endpoint
+    assert not c.matches((0, 8, 5))   # pattern mismatch
+    assert c.pattern_matches((0, 7, 99))
+
+
+def test_cds_insert_prunes_children():
+    cds = CDS(3)
+    cds.insert(Constraint((5,), 1, 2, 9))        # creates node (5)
+    cds.insert(Constraint((5, 4), 2, 0, 3))      # child 4 inside (2,9)!
+    node5 = cds.root.children[5]
+    cds.insert(Constraint((5,), 1, 3, 8))        # prunes child 4
+    assert 4 not in node5.children
+
+
+def test_chain_bottom_detection():
+    cds = CDS(3)
+    cds.insert(Constraint((STAR,), 1, 0, 5))
+    cds.insert(Constraint((7,), 1, 2, 9))
+    g = cds.generalizing((7,))
+    bottom = _chain_bottom(g)
+    assert bottom is not None  # (7,) specializes (*,)
+    cds2 = CDS(3)
+    cds2.insert(Constraint((7, STAR), 2, 0, 5))
+    cds2.insert(Constraint((STAR, 3), 2, 2, 9))
+    g2 = cds2.generalizing((7, 3))
+    assert len(g2) == 2
+    assert _chain_bottom(g2) is None  # incomparable: no sound cache spot
+
+
+def test_generalizes():
+    assert _generalizes((STAR, STAR), (1, 2))
+    assert _generalizes((1, STAR), (1, 2))
+    assert not _generalizes((1, 3), (1, 2))

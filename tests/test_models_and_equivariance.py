@@ -1,0 +1,132 @@
+"""Model-level behaviour: decode==forward, MoE balance, equivariance."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.stats import special_ortho_group
+
+from repro.layers.moe import MoEConfig
+from repro.models.gnn import random_graph_batch
+from repro.models.gnn.egnn import EGNNConfig, egnn_forward, init_egnn
+from repro.models.gnn.mace import (MACEConfig, gaunt_tensor, init_mace,
+                                   mace_energy, real_sph_harm)
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      forward, init_params, _lm_logits,
+                                      loss_fn, prefill)
+
+CFG = TransformerConfig(name="t", n_layers=3, d_model=64, n_heads=4,
+                        n_kv_heads=2, d_ff=128, vocab_size=256,
+                        dtype=jnp.float32, remat=False, max_cache_len=48)
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    return init_params(jax.random.PRNGKey(0), CFG)
+
+
+def test_decode_matches_full_forward(tiny_lm):
+    p = tiny_lm
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, 256)
+    cache, _ = prefill(p, toks, CFG, max_len=48)
+    cur = cache
+    nxt = toks[:, :1]
+    outs = []
+    for i in range(4):
+        lg, cur = decode_step(p, cur, nxt, CFG)
+        outs.append(lg)
+        nxt = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    # oracle: full forward over the concatenated stream
+    stream = jnp.concatenate([toks, toks[:, :1]], axis=1)
+    for i in range(3):
+        x, _ = forward(p, stream, CFG)
+        full = _lm_logits(x[:, -1:, :], p, CFG, None)
+        np.testing.assert_allclose(np.asarray(outs[i]), np.asarray(full),
+                                   atol=2e-4, rtol=2e-4)
+        stream = jnp.concatenate(
+            [stream, jnp.argmax(full, -1).astype(jnp.int32)], axis=1)
+
+
+def test_vocab_padding_masks_loss():
+    cfg = dataclasses.replace(CFG, vocab_size=250)  # pads to 256
+    assert cfg.padded_vocab == 256
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 250)
+    loss = loss_fn(p, {"tokens": toks, "labels": toks}, cfg)
+    assert np.isfinite(float(loss))
+    # padded logits must be -inf-masked: argmax never lands there
+    x, _ = forward(p, toks, cfg)
+    lg = _lm_logits(x, p, cfg, None)
+    assert int(jnp.max(jnp.argmax(lg, -1))) < 250
+
+
+def test_moe_local_every_token_routed():
+    cfg = dataclasses.replace(
+        CFG, d_ff=0,
+        moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32,
+                      capacity_factor=8.0))  # huge capacity: no drops
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 256)
+    loss, grads = jax.value_and_grad(
+        lambda pp: loss_fn(pp, {"tokens": toks, "labels": toks}, cfg))(p)
+    assert np.isfinite(float(loss))
+    g = grads["moe"]["w_down"]
+    assert np.isfinite(np.asarray(g)).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_egnn_equivariance_property(seed):
+    g = random_graph_batch(40, 160, 8, seed=seed % 100, coords=True)
+    cfg = EGNNConfig(d_in=8, n_layers=2, d_hidden=16)
+    p = init_egnn(jax.random.PRNGKey(seed % 97), cfg)
+    rot = special_ortho_group.rvs(3, random_state=seed % 1000)
+    shift = np.asarray([1.0, -2.0, 0.5])
+    g2 = dataclasses.replace(
+        g, coords=(np.asarray(g.coords) @ rot.T + shift).astype(np.float32))
+    h1, x1 = egnn_forward(p, g, cfg)
+    h2, x2 = egnn_forward(p, g2, cfg)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(x1) @ rot.T + shift,
+                               np.asarray(x2), atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_mace_rotation_invariance_property(seed):
+    g = random_graph_batch(30, 120, 8, seed=seed % 100, coords=True,
+                           n_graphs=3)
+    cfg = MACEConfig(d_in=8, d_hidden=16)
+    p = init_mace(jax.random.PRNGKey(seed % 89), cfg)
+    rot = special_ortho_group.rvs(3, random_state=seed % 1000)
+    g2 = dataclasses.replace(
+        g, coords=(np.asarray(g.coords) @ rot.T).astype(np.float32))
+    e1 = mace_energy(p, g, cfg)
+    e2 = mace_energy(p, g2, cfg)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_gaunt_orthonormality():
+    """G[0,a,b] = Y00·δ_ab (orthonormality through the l=0 channel)."""
+    g = gaunt_tensor()
+    y00 = 0.5 / np.sqrt(np.pi)
+    np.testing.assert_allclose(g[0], np.eye(9) * y00, atol=1e-12)
+    # full symmetry of the Gaunt tensor
+    np.testing.assert_allclose(g, np.transpose(g, (1, 0, 2)), atol=1e-12)
+    np.testing.assert_allclose(g, np.transpose(g, (2, 1, 0)), atol=1e-12)
+
+
+def test_sph_harm_unit_norm():
+    """Σ_m Y_lm² is constant on the sphere for each l (addition thm)."""
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((100, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    y = np.asarray(real_sph_harm(jnp.asarray(v)))
+    for l, sl in [(0, slice(0, 1)), (1, slice(1, 4)), (2, slice(4, 9))]:
+        s = (y[:, sl] ** 2).sum(axis=1)
+        expect = (2 * l + 1) / (4 * np.pi)
+        np.testing.assert_allclose(s, expect, rtol=1e-6)

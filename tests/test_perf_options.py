@@ -1,0 +1,83 @@
+"""§Perf engine options must preserve exact counts (rotate, tile, 2-level)
++ serving router + partitioned-join stats."""
+import numpy as np
+import pytest
+
+from repro.core import GraphDB, VLFTJ, count, get_query, lftj_count
+from repro.dist.sharded_join import PartitionedJoin
+from repro.graphs import powerlaw_cluster, node_sample
+from repro.serve import QueryRequest, QueryServer
+
+QUERIES = ["3-clique", "4-clique", "4-cycle", "3-path", "2-comb",
+           "2-lollipop"]
+
+
+@pytest.fixture(scope="module")
+def gdb():
+    g = powerlaw_cluster(400, 4, seed=7)
+    unary = {f"v{i}": node_sample(g.n_nodes, 6, seed=i)
+             for i in range(1, 5)}
+    return GraphDB(g, unary)
+
+
+@pytest.fixture(scope="module")
+def refs(gdb):
+    return {q: count(get_query(q), gdb, engine="vlftj") for q in QUERIES}
+
+
+@pytest.mark.parametrize("kw", [
+    dict(rotate_checks=True),
+    dict(check_mode="auto", tile_width=64),
+    dict(check_mode="tile", tile_width=512),   # width covers max degree
+    dict(check_mode="bsearch2", rotate_checks=True),
+    dict(check_mode="bsearch2", summary_stride=32),
+])
+def test_perf_modes_preserve_counts(gdb, refs, kw):
+    if kw.get("check_mode") == "tile":
+        if gdb.max_degree > kw["tile_width"]:
+            pytest.skip("tile-only mode requires width >= max degree")
+    for qname in QUERIES:
+        c = VLFTJ(get_query(qname), gdb, **kw).count()
+        assert c == refs[qname], (qname, kw)
+
+
+def test_partitioned_join_stats_and_counts(gdb, refs):
+    for qname in ["3-clique", "3-path"]:
+        pj = PartitionedJoin(get_query(qname), gdb, n_workers=4,
+                             granularity=3)
+        assert pj.count() == refs[qname]
+        assert pj.stats["parts"] == 12
+        assert pj.stats["makespan"] <= pj.stats["total_time"] + 1e-9
+        assert len(pj.stats["worker_time"]) == 4
+
+
+def test_query_server_routes_and_counts():
+    g = powerlaw_cluster(300, 4, seed=3)
+    srv = QueryServer(g)
+    res = srv.execute_batch([
+        QueryRequest("3-clique", selectivity=8, seed=0),
+        QueryRequest("3-path", selectivity=8, seed=0),
+        QueryRequest("2-lollipop", selectivity=8, seed=0),
+    ])
+    assert [r.engine for r in res] == ["vlftj", "yannakakis", "hybrid"]
+    # counts agree with the scalar oracle on the same GraphDB
+    gdb = srv._gdb_for(8, 0)
+    for r in res:
+        ref = lftj_count(get_query(r.request.query_name),
+                         gdb.to_database())
+        assert r.count == ref
+
+
+def test_overlapped_reduce_apply_single_axis():
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.dist.overlap import overlapped_reduce_apply
+    mesh = jax.make_mesh((1,), ("data",))
+    g = np.arange(16, dtype=np.float32)
+    p = np.ones(16, dtype=np.float32)
+    f = jax.shard_map(
+        lambda gg, pp: overlapped_reduce_apply(
+            gg, pp, "data", lambda pc, gc: pc - 0.1 * gc, n_chunks=4),
+        mesh=mesh, in_specs=(P(), P()), out_specs=P(), check_vma=False)
+    out = np.asarray(f(g, p))
+    np.testing.assert_allclose(out, p - 0.1 * g, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,76 @@
+"""Query IR, hypergraph, NEO/GAO, and AGM-bound unit tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Hypergraph, PAPER_QUERIES, agm_bound, all_neos,
+                        choose_gao, fractional_edge_cover, get_query,
+                        is_beta_acyclic, is_neo, parse)
+
+
+def test_parse_roundtrip():
+    q = parse("edge(a,b), edge(b,c), edge(a,c), a<b, b<c", "tri")
+    assert q.num_vars == 3
+    assert len(q.atoms) == 3
+    assert len(q.filters) == 2
+
+
+def test_acyclicity_classification():
+    cyclic = {"3-clique", "4-clique", "4-cycle", "2-lollipop",
+              "3-lollipop"}
+    for name, mk in PAPER_QUERIES.items():
+        hg = Hypergraph.of(mk())
+        assert is_beta_acyclic(hg) == (name not in cyclic), name
+
+
+def test_paper_neo_orders_4path():
+    """Table 4's NEO vs non-NEO classification, verbatim."""
+    q = get_query("4-path")
+    hg = Hypergraph.of(q)
+    for order in ["abcde", "bacde", "bcade", "cbade", "cbdae"]:
+        assert is_neo(hg, tuple(order)), order
+    for order in ["abdce", "badce"]:
+        assert not is_neo(hg, tuple(order)), order
+
+
+def test_choose_gao_prefers_long_path_neo():
+    q = get_query("4-path")
+    assert choose_gao(q) == tuple("abcde")
+
+
+def test_all_neos_are_neos():
+    for name in ["3-path", "1-tree", "2-comb", "2-tree"]:
+        q = get_query(name)
+        hg = Hypergraph.of(q)
+        neos = all_neos(hg)
+        assert neos, name
+        for o in neos[:50]:
+            assert is_neo(hg, o)
+
+
+def test_agm_triangle_n_to_three_halves():
+    q = get_query("3-clique")
+    n = 10_000
+    bound = agm_bound(q, {"edge": n})
+    assert math.isclose(bound, n ** 1.5, rel_tol=1e-6)
+
+
+def test_agm_cover_is_feasible():
+    q = get_query("2-lollipop")
+    sizes = {"edge": 5000, "v1": 100}
+    x, _ = fractional_edge_cover(q, sizes)
+    for v in q.variables:
+        cover = sum(x[j] for j, a in enumerate(q.atoms) if v in a.vars)
+        assert cover >= 1 - 1e-9, v
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 10 ** 6), m=st.integers(1, 10 ** 5))
+def test_agm_path_bound_formula(n, m):
+    """3-path bound = |v1|·|edge|·... LP must beat the trivial cover."""
+    q = get_query("3-path")
+    bound = agm_bound(q, {"edge": n, "v1": m, "v2": m})
+    trivial = float(m) * n * m  # v1 ⋈ middle edge ⋈ v2 covers all vars
+    assert bound <= trivial * 1.001

@@ -1,0 +1,46 @@
+"""Sorted-array trie: range navigation + gaps vs numpy oracles."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Database, Relation
+from repro.core.relation import NEG_INF, POS_INF
+
+
+def test_dedup_and_sort():
+    r = Relation(np.array([[3, 1], [1, 2], [3, 1], [1, 1]]))
+    np.testing.assert_array_equal(
+        r.data, np.array([[1, 1], [1, 2], [3, 1]]))
+
+
+def test_child_range_and_contains():
+    r = Relation(np.array([[1, 5], [1, 7], [2, 3], [4, 0]]))
+    lo, hi = r.child_range(0, len(r), 0, 1)
+    assert (lo, hi) == (0, 2)
+    assert r.contains((1, 7))
+    assert not r.contains((1, 6))
+    assert not r.contains((3, 0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=40),
+       st.integers(0, 55))
+def test_gap_around_oracle(values, probe):
+    arr = np.array(sorted(set(values)))
+    r = Relation(arr)
+    l, rgt = r.gap_around(0, len(r), 0, probe)
+    if probe in set(arr.tolist()):
+        assert (l, rgt) == (probe, probe)
+    else:
+        lows = arr[arr < probe]
+        highs = arr[arr > probe]
+        assert l == (int(lows.max()) if lows.size else NEG_INF)
+        assert rgt == (int(highs.min()) if highs.size else POS_INF)
+
+
+def test_database_index_cache():
+    r = Relation(np.array([[1, 5], [2, 3]]), "edge")
+    db = Database({"edge": r})
+    a = db.indexed("edge", (1, 0))
+    b = db.indexed("edge", (1, 0))
+    assert a is b
+    np.testing.assert_array_equal(a.data, np.array([[3, 2], [5, 1]]))
