@@ -7,7 +7,7 @@ competitive only at very high selectivity.
 """
 from __future__ import annotations
 
-from repro.core import JoinBlowup, count, get_query
+from repro.core import GraphStats, JoinBlowup, count, get_query, plan_query
 
 from .common import Row, bench_gdb, timed
 
@@ -23,9 +23,12 @@ def run(quick: bool = True) -> list[Row]:
     for ds in DATASETS[: 2 if quick else None]:
         for sel in SELECTIVITIES:
             gdb = bench_gdb(ds, scale, selectivity=sel)
+            stats = GraphStats.of(gdb)
             for qname in QUERIES:
                 q = get_query(qname)
-                ref, us = timed(lambda: count(q, gdb, engine="yannakakis"),
+                # plan outside the timer: measure execution, not planning
+                py = plan_query(q, stats, engine="yannakakis")
+                ref, us = timed(lambda: count(q, gdb, plan=py),
                                 timeout_s=timeout)
                 rows.append(Row(f"t7/{qname}/{ds}/sel{sel}/ms-analogue",
                                 us, f"count={ref}"))
@@ -38,14 +41,16 @@ def run(quick: bool = True) -> list[Row]:
                                     float("inf"),
                                     "frontier blowup (paper: '-')"))
                     continue
-                c2, us2 = timed(lambda: count(q, gdb, engine="vlftj"),
+                pv = plan_query(q, stats, engine="vlftj")
+                c2, us2 = timed(lambda: count(q, gdb, plan=pv),
                                 timeout_s=timeout)
                 assert c2 == ref, (qname, ds, sel, c2, ref)
                 rows.append(Row(f"t7/{qname}/{ds}/sel{sel}/vlftj", us2,
                                 f"count={c2};vs_ms={us2 / max(us, 1):.1f}x"))
                 try:
+                    pb = plan_query(q, stats, engine="binary")
                     c3, us3 = timed(
-                        lambda: count(q, gdb, engine="binary",
+                        lambda: count(q, gdb, plan=pb,
                                       cap=20_000_000), timeout_s=timeout)
                     assert c3 == ref
                     rows.append(Row(f"t7/{qname}/{ds}/sel{sel}/binary",

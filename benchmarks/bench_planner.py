@@ -1,0 +1,129 @@
+"""Planner benchmark: plan-cache latency + cost-model fidelity.
+
+Two measurements per query shape:
+
+  * ``plan/<q>/cold`` vs ``plan/<q>/cached`` — the latency of
+    ``PlanCache.get_or_plan`` on a miss (full candidate enumeration +
+    costing + AGM LP) vs a hit (one dict lookup).  The gap is what the
+    serving layer saves on every repeated pattern shape.
+  * ``costmodel/<q>/gao_rank_corr`` — Spearman rank correlation between
+    the model's estimated cost and the measured vectorized-LFTJ runtime
+    over a sample of candidate GAOs; ``costmodel/engines/rank_corr``
+    does the same across engine candidates.  Positive correlation means
+    cost-based selection is picking better plans than a blind heuristic.
+
+``python -m benchmarks.run --only planner`` or import ``run()``;
+``record_baseline()`` writes ``BENCH_planner.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (GraphStats, PlanCache, count, execute, get_query,
+                        plan_query)
+from repro.core.planner import candidate_gaos, candidate_plans
+
+from .common import Row, bench_gdb, timed
+
+SHAPES = ["3-clique", "4-clique", "4-cycle", "3-path", "4-path",
+          "1-tree", "2-comb", "2-lollipop", "3-lollipop"]
+CORR_SHAPES = ["3-clique", "4-cycle", "3-path"]
+
+
+def _spearman(a, b) -> float:
+    ra = np.argsort(np.argsort(a)).astype(np.float64)
+    rb = np.argsort(np.argsort(b)).astype(np.float64)
+    if ra.std() == 0 or rb.std() == 0:
+        return 0.0
+    return float(np.corrcoef(ra, rb)[0, 1])
+
+
+def run(quick: bool = True) -> list[Row]:
+    rows: list[Row] = []
+    gdb = bench_gdb("ca-GrQc", 0.12 if quick else 1.0, selectivity=8)
+    stats = GraphStats.of(gdb)
+
+    # -- plan-cache latency: cold (miss) vs cached (hit) ---------------------
+    for qname in SHAPES:
+        q = get_query(qname)
+        cache = PlanCache()
+        t0 = time.time()
+        plan = cache.get_or_plan(q, stats)
+        cold_us = (time.time() - t0) * 1e6
+        _, hit_us = timed(lambda: cache.get_or_plan(q, stats),
+                          repeats=200, timeout_s=10)
+        rows.append(Row(f"plan/{qname}/cold", cold_us,
+                        f"engine={plan.engine};gao={''.join(plan.gao)}"))
+        rows.append(Row(f"plan/{qname}/cached", hit_us,
+                        f"hits={cache.hits}"))
+
+    # -- cost model vs actual: GAO ranking -----------------------------------
+    for qname in CORR_SHAPES:
+        q = get_query(qname)
+        gaos = candidate_gaos(q)
+        if len(gaos) > 8:   # sample evenly across the candidate spectrum
+            idx = np.linspace(0, len(gaos) - 1, 8).astype(int)
+            gaos = [gaos[i] for i in idx]
+        est, actual = [], []
+        for gao in gaos:
+            plan = plan_query(q, stats, engine="vlftj", gao=gao)
+            execute(plan, gdb)          # warm the jit caches
+            _, us = timed(lambda: execute(plan, gdb), repeats=3,
+                          timeout_s=60)
+            est.append(plan.est_cost)   # the pinned-gao estimate
+            actual.append(us)
+        rho = _spearman(np.asarray(est), np.asarray(actual))
+        rows.append(Row(f"costmodel/{qname}/gao_rank_corr", 0.0,
+                        f"rho={rho:.3f};n={len(gaos)}"))
+
+    # -- cost model vs actual: engine ranking --------------------------------
+    est, actual = [], []
+    for qname in SHAPES:
+        q = get_query(qname)
+        for plan in candidate_plans(q, stats):
+            execute(plan, gdb)
+            _, us = timed(lambda: execute(plan, gdb), repeats=3,
+                          timeout_s=60)
+            est.append(plan.est_cost)
+            actual.append(us)
+    rho = _spearman(np.asarray(est), np.asarray(actual))
+    rows.append(Row("costmodel/engines/rank_corr", 0.0,
+                    f"rho={rho:.3f};n={len(est)}"))
+
+    # -- end-to-end: served count latency with plan cache --------------------
+    cache = PlanCache()
+    for qname in ["3-clique", "3-path"]:
+        q = get_query(qname)
+        count(q, gdb, cache=cache)      # cold: plan + compile + execute
+        _, us = timed(lambda: count(q, gdb, cache=cache), repeats=3,
+                      timeout_s=60)
+        rows.append(Row(f"serve/{qname}/warm_count", us,
+                        f"cache_hits={cache.hits}"))
+    return rows
+
+
+def record_baseline(path: str | None = None, quick: bool = True) -> dict:
+    """Write BENCH_planner.json so future PRs have a perf trajectory."""
+    rows = run(quick=quick)
+    payload = {
+        "bench": "planner",
+        "quick": quick,
+        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 2),
+                  "derived": r.derived} for r in rows],
+    }
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_planner.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row.csv())

@@ -8,7 +8,8 @@ fraction 0.8% → 25%) at fixed graph.
 """
 from __future__ import annotations
 
-from repro.core import GraphDB, VLFTJ, get_query, yannakakis_count
+from repro.core import (GraphDB, GraphStats, VLFTJ, get_query, plan_query,
+                        yannakakis_count)
 from repro.graphs import node_sample, powerlaw_cluster
 
 from .common import Row, timed
@@ -25,10 +26,11 @@ def run(quick: bool = True) -> list[Row]:
         unary = {"v1": node_sample(g.n_nodes, sel, seed=11),
                  "v2": node_sample(g.n_nodes, sel, seed=13)}
         gdb = GraphDB(g, unary)
+        pv = plan_query(q, GraphStats.of(gdb), engine="vlftj")
         ref, us_ms = timed(lambda: yannakakis_count(q, gdb),
                            timeout_s=120)
-        c2, us_vl = timed(lambda: VLFTJ(q, gdb,
-                                        rotate_checks=True).count(),
+        c2, us_vl = timed(lambda: VLFTJ(q, gdb, rotate_checks=True,
+                                        plan=pv).count(),
                           timeout_s=120)
         assert c2 == ref
         rows.append(Row(f"f345/3-path/sel{sel}/ms-analogue", us_ms,

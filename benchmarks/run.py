@@ -15,30 +15,36 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: cyclic,acyclic,ideas,gao,"
-                         "granularity,scaling,agm")
+                         "granularity,scaling,agm,planner")
     args = ap.parse_args()
     quick = not args.full
 
-    from . import (bench_acyclic, bench_agm, bench_cyclic, bench_gao,
-                   bench_granularity, bench_ideas, bench_scaling,
-                   bench_selectivity)
     modules = {
-        "cyclic": bench_cyclic,        # Table 6
-        "acyclic": bench_acyclic,      # Table 7
-        "ideas": bench_ideas,          # Tables 1-3
-        "gao": bench_gao,              # Table 4
-        "granularity": bench_granularity,  # Table 5
-        "scaling": bench_scaling,      # Figures 6-7
-        "selectivity": bench_selectivity,  # Figures 3-5
-        "agm": bench_agm,              # Appendix A
+        "cyclic": "bench_cyclic",          # Table 6
+        "acyclic": "bench_acyclic",        # Table 7
+        "ideas": "bench_ideas",            # Tables 1-3
+        "gao": "bench_gao",                # Table 4
+        "granularity": "bench_granularity",    # Table 5
+        "scaling": "bench_scaling",        # Figures 6-7
+        "selectivity": "bench_selectivity",    # Figures 3-5
+        "agm": "bench_agm",                # Appendix A
+        "planner": "bench_planner",        # plan cache + cost model
     }
     chosen = (args.only.split(",") if args.only else list(modules))
+    unknown = [k for k in chosen if k not in modules]
+    if unknown:
+        ap.error(f"unknown --only keys {unknown}; "
+                 f"options: {','.join(modules)}")
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0
+    import importlib
     for key in chosen:
-        mod = modules[key]
+        mod_name = modules[key]
+        # import lazily: one module's missing dependency (e.g. the
+        # unimplemented repro.dist) must not take down the others
         try:
+            mod = importlib.import_module(f".{mod_name}", __package__)
             for row in mod.run(quick=quick):
                 print(row.csv(), flush=True)
         except Exception as e:  # noqa: BLE001

@@ -27,7 +27,7 @@ for i in range(24):
                                  seed=int(rng.integers(3))))
 
 t0 = time.time()
-results = server.execute_batch(requests)
+results = server.execute_many(requests)   # plan-grouped batched execution
 wall = time.time() - t0
 
 by_engine: dict = {}
@@ -37,7 +37,8 @@ for r in results:
           f"-> {r.count:>12,}  [{r.engine:10s} {r.latency_s*1e3:7.1f} ms]")
 
 print(f"\n{len(results)} requests in {wall:.2f}s "
-      f"({len(results)/wall:.1f} qps)")
+      f"({len(results)/wall:.1f} qps)  plan cache: "
+      f"{server.plan_cache_info()}")
 for eng, lats in sorted(by_engine.items()):
     lats = sorted(lats)
     p50 = lats[len(lats) // 2] * 1e3

@@ -1,12 +1,16 @@
 from .agm import agm_bound, fractional_edge_cover
 from .binary_join import BinaryJoin, JoinBlowup, binary_join_count
 from .device_graph import GraphDB
-from .engine import ENGINES, count, pick_engine
+from .engine import ENGINES, count, execute, pick_engine
 from .gao import choose_gao
 from .hybrid import HybridJoin, hybrid_count
 from .hypergraph import Hypergraph, all_neos, is_beta_acyclic, is_neo
 from .lftj_ref import LFTJ, lftj_count
 from .minesweeper_ref import Minesweeper, minesweeper_count
+from .plan import (GraphStats, HybridPlan, JoinPlan, LevelPlan,
+                   compile_levels)
+from .planner import (PlanCache, candidate_gaos, candidate_plans,
+                      decompose_hybrid, estimate_vlftj_cost, plan_query)
 from .query import (Atom, LessThan, PAPER_QUERIES, Query, clique, comb,
                     cycle, get_query, lollipop, parse, path, tree)
 from .relation import Database, Relation
@@ -15,11 +19,14 @@ from .yannakakis import CountingYannakakis, yannakakis_count
 
 __all__ = [
     "agm_bound", "fractional_edge_cover", "BinaryJoin", "JoinBlowup",
-    "binary_join_count", "GraphDB", "ENGINES", "count", "pick_engine",
-    "choose_gao", "HybridJoin", "hybrid_count", "Hypergraph", "all_neos",
-    "is_beta_acyclic", "is_neo", "LFTJ", "lftj_count", "Minesweeper",
-    "minesweeper_count", "Atom", "LessThan", "PAPER_QUERIES", "Query",
-    "clique", "comb", "cycle", "get_query", "lollipop", "parse", "path",
-    "tree", "Database", "Relation", "VLFTJ", "vlftj_count",
-    "CountingYannakakis", "yannakakis_count",
+    "binary_join_count", "GraphDB", "ENGINES", "count", "execute",
+    "pick_engine", "choose_gao", "HybridJoin", "hybrid_count",
+    "Hypergraph", "all_neos", "is_beta_acyclic", "is_neo", "LFTJ",
+    "lftj_count", "Minesweeper", "minesweeper_count", "GraphStats",
+    "HybridPlan", "JoinPlan", "LevelPlan", "compile_levels", "PlanCache",
+    "candidate_gaos", "candidate_plans", "decompose_hybrid",
+    "estimate_vlftj_cost", "plan_query", "Atom", "LessThan",
+    "PAPER_QUERIES", "Query", "clique", "comb", "cycle", "get_query",
+    "lollipop", "parse", "path", "tree", "Database", "Relation", "VLFTJ",
+    "vlftj_count", "CountingYannakakis", "yannakakis_count",
 ]

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from .plan import JoinPlan
 from .query import Query
 from .relation import Database
 
@@ -140,10 +141,14 @@ class BinaryJoin:
     """Greedy Selinger-lite planner + materialized sort-merge execution."""
 
     def __init__(self, query: Query, db: Database,
-                 cap: int = 50_000_000):
+                 cap: int = 50_000_000,
+                 plan: "JoinPlan | None" = None):
         self.query = query
         self.db = db
         self.cap = cap
+        # the pairwise baseline orders joins greedily at runtime; the plan
+        # is carried for introspection/uniform dispatch only
+        self.join_plan = plan
         self.stats = {"max_intermediate": 0, "joins": 0}
 
     def _estimate(self, inter_size: int, inter_vars, atom, rel_len: int,

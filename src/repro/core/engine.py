@@ -1,6 +1,9 @@
-"""Unified join-engine API.
+"""Unified join-engine API: ``plan → execute``.
 
-``count(query, gdb, engine=...)`` dispatches to any of the engines:
+``count(query, gdb, engine=...)`` routes every request through the
+cost-based planner (``core/planner.py``): the query + graph stats are
+planned into a frozen :class:`~repro.core.plan.JoinPlan`, and
+:func:`execute` dispatches the plan to its physical operator:
 
   * ``lftj_ref``        — faithful scalar LeapFrog TrieJoin (oracle)
   * ``minesweeper_ref`` — faithful Minesweeper w/ CDS (oracle)
@@ -8,18 +11,24 @@
   * ``vlftj``           — vectorized worst-case-optimal join (TPU-native)
   * ``yannakakis``      — vectorized #MS / Yannakakis counting (β-acyclic)
   * ``hybrid``          — tree message passing + seeded core LFTJ
-  * ``auto``            — the paper's summary heuristic: Minesweeper-analogue
-                          for acyclic, hybrid for lollipop-shaped, LFTJ for
-                          cyclic (Table 6/7 winners).
+  * ``auto``            — cheapest estimated plan among the candidates
+                          (subsumes the paper's Table 6/7 summary
+                          heuristic: Minesweeper-analogue for acyclic,
+                          hybrid for lollipop-shaped, LFTJ for cyclic).
+
+Pass ``plan=`` to skip planning (e.g. a :class:`planner.PlanCache` hit),
+or ``cache=`` to memoize plans across calls.
 """
 from __future__ import annotations
 
 from .binary_join import BinaryJoin
 from .device_graph import GraphDB
-from .hybrid import HybridDecomposition, HybridJoin
+from .hybrid import HybridJoin
 from .hypergraph import Hypergraph, is_beta_acyclic
 from .lftj_ref import LFTJ
 from .minesweeper_ref import Minesweeper
+from .plan import GraphStats, JoinPlan
+from .planner import PlanCache, decompose_hybrid, plan_query
 from .query import Query
 from .vlftj import VLFTJ
 from .yannakakis import CountingYannakakis, NotTreeShaped
@@ -28,27 +37,59 @@ ENGINES = ("lftj_ref", "minesweeper_ref", "binary", "vlftj", "yannakakis",
            "hybrid", "auto")
 
 
-def pick_engine(query: Query) -> str:
+def pick_engine(query: Query, stats: GraphStats | None = None) -> str:
+    """Engine routing.  With ``stats`` the choice is cost-based (cheapest
+    candidate plan); without, the paper's structural summary heuristic."""
+    if stats is not None:
+        return plan_query(query, stats, engine="auto").engine
     if is_beta_acyclic(Hypergraph.of(query)) and not query.filters:
         return "yannakakis"
-    if HybridDecomposition(query).applicable:
+    if decompose_hybrid(query) is not None:
         return "hybrid"
     return "vlftj"
 
 
-def count(query: Query, gdb: GraphDB, engine: str = "auto", **kw) -> int:
-    if engine == "auto":
-        engine = pick_engine(query)
+def execute(plan: JoinPlan, gdb: GraphDB, **kw) -> int:
+    """Run a compiled plan against a graph and return the count."""
+    engine = plan.engine
+    query = plan.query
     if engine == "vlftj":
-        return VLFTJ(query, gdb, **kw).count()
+        return VLFTJ(query, gdb, plan=plan, **kw).count()
     if engine == "yannakakis":
-        return CountingYannakakis(query, gdb).count()
+        return CountingYannakakis(query, gdb, plan=plan).count()
     if engine == "hybrid":
-        return HybridJoin(query, gdb, **kw).count()
+        return HybridJoin(query, gdb, plan=plan, **kw).count()
     if engine == "lftj_ref":
-        return LFTJ(query, gdb.to_database()).count()
+        return LFTJ(query, gdb.to_database(), plan=plan).count()
     if engine == "minesweeper_ref":
-        return Minesweeper(query, gdb.to_database(), **kw).count()
+        return Minesweeper(query, gdb.to_database(), plan=plan, **kw).count()
     if engine == "binary":
-        return BinaryJoin(query, gdb.to_database(), **kw).count()
+        return BinaryJoin(query, gdb.to_database(), plan=plan, **kw).count()
     raise ValueError(f"unknown engine {engine!r}; options: {ENGINES}")
+
+
+def count(query: Query, gdb: GraphDB, engine: str = "auto",
+          plan: JoinPlan | None = None, cache: PlanCache | None = None,
+          gao: tuple[str, ...] | None = None, **kw) -> int:
+    if plan is None:
+        if engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {engine!r}; options: {ENGINES}")
+        stats = GraphStats.of(gdb)
+        if gao is not None:
+            # a pinned GAO bypasses the cache (keys don't carry the GAO)
+            plan = plan_query(query, stats, engine=engine, gao=gao)
+        elif cache is not None:
+            plan = cache.get_or_plan(query, stats, engine)
+        else:
+            plan = plan_query(query, stats, engine=engine)
+    elif (plan.query.atoms, plan.query.filters) != (query.atoms,
+                                                    query.filters):
+        raise ValueError(
+            f"plan was built for {plan.query.name!r}, not {query.name!r}")
+    elif engine != "auto" and plan.engine != engine:
+        raise ValueError(f"plan uses engine {plan.engine!r} but "
+                         f"engine={engine!r} was requested")
+    elif gao is not None and tuple(gao) != plan.gao:
+        raise ValueError("both plan= and a conflicting gao= given")
+    return execute(plan, gdb, **kw)

@@ -8,133 +8,76 @@ by counting message passing (≙ Minesweeper Idea 6 caching + Idea 8
 tallies); the core is then joined by vectorized LFTJ seeded with those
 multiplicities (≙ Idea 7: clique-part gaps only advance the frontier).
 
-Supported shape: one cyclic core, trees hanging off a single attachment
-variable (covers the paper's {2,3}-lollipop); anything else falls back to
-plain vectorized LFTJ.
+The tree/core split itself is a *planning* decision and lives in
+``core.planner.decompose_hybrid``; this module only executes
+:class:`~repro.core.plan.HybridPlan`.  Supported shape: one cyclic core,
+trees hanging off a single attachment variable (covers the paper's
+{2,3}-lollipop); anything else falls back to plain vectorized LFTJ.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from .device_graph import GraphDB
-from .gao import _cyclic_heuristic_order
-from .query import Atom, LessThan, Query
+from .plan import GraphStats, HybridPlan, JoinPlan
+from .query import Query
 from .vlftj import VLFTJ
 from .yannakakis import CountingYannakakis
 
 
-def _var_edges(query: Query) -> list[tuple[str, str]]:
-    out = []
-    seen = set()
-    for a in query.atoms:
-        if a.arity == 2 and a.vars[0] != a.vars[1]:
-            key = frozenset(a.vars)
-            if key not in seen:
-                seen.add(key)
-                out.append((a.vars[0], a.vars[1]))
-    return out
-
-
-def _bridges(vertices, edges) -> set[frozenset]:
-    """Bridges via DFS low-link (tiny graphs)."""
-    adj: dict[str, list[str]] = {v: [] for v in vertices}
-    for u, v in edges:
-        adj[u].append(v)
-        adj[v].append(u)
-    disc: dict[str, int] = {}
-    low: dict[str, int] = {}
-    bridges: set[frozenset] = set()
-    timer = [0]
-
-    def dfs(u: str, parent: str | None):
-        disc[u] = low[u] = timer[0]
-        timer[0] += 1
-        skipped_parent_edge = False
-        for w in adj[u]:
-            if w == parent and not skipped_parent_edge:
-                skipped_parent_edge = True
-                continue
-            if w in disc:
-                low[u] = min(low[u], disc[w])
-            else:
-                dfs(w, u)
-                low[u] = min(low[u], low[w])
-                if low[w] > disc[u]:
-                    bridges.add(frozenset((u, w)))
-
-    for v in vertices:
-        if v not in disc:
-            dfs(v, None)
-    return bridges
-
-
 class HybridDecomposition:
-    """Splits a query into (tree subquery -> attachment var, core subquery).
+    """Back-compat view over :func:`repro.core.planner.decompose_hybrid`.
 
     ``applicable`` is False when the shape is unsupported.
     """
 
-    def __init__(self, query: Query):
+    def __init__(self, query: Query,
+                 plan: HybridPlan | None = None):
         self.query = query
-        self.applicable = False
-        edges = _var_edges(query)
-        if not edges:
-            return
-        bridges = _bridges(query.variables, edges)
-        core_edges = [e for e in edges if frozenset(e) not in bridges]
-        if not core_edges or len(core_edges) == len(edges):
-            return  # fully acyclic or fully cyclic: no hybrid split
-        core_vars = sorted({v for e in core_edges for v in e})
-        # attachment vars: core vars incident to a bridge
-        attach = sorted({v for e in bridges for v in e if v in core_vars})
-        if len(attach) != 1:
-            return
-        self.attachment = attach[0]
-        core_set = set(core_vars)
-        tree_vars = [v for v in query.variables
-                     if v not in core_set or v == self.attachment]
-        tree_set = set(tree_vars)
-        # filters must stay within one side
-        for f in query.filters:
-            inside_core = f.left in core_set and f.right in core_set
-            inside_tree = f.left in tree_set and f.right in tree_set
-            if not (inside_core or inside_tree):
-                return
-        tree_atoms = []
-        core_atoms = []
-        for a in query.atoms:
-            if a.arity == 1:
-                (tree_atoms if a.vars[0] in tree_set else core_atoms).append(a)
-            elif frozenset(a.vars) in bridges:
-                tree_atoms.append(a)
-            else:
-                core_atoms.append(a)
-        tree_filters = [f for f in query.filters
-                        if f.left in tree_set and f.right in tree_set]
-        core_filters = [f for f in query.filters
-                        if f.left in core_set and f.right in core_set]
-        if tree_filters:
-            return  # counting message passing cannot apply < filters
-        self.tree_query = Query(tuple(tree_atoms), (),
-                                f"{query.name}-tree")
-        self.core_query = Query(tuple(core_atoms), tuple(core_filters),
-                                f"{query.name}-core")
-        self.core_vars = core_vars
-        self.applicable = True
+        if plan is None:
+            from .planner import decompose_hybrid
+            plan = decompose_hybrid(query)
+        self.plan = plan
+        self.applicable = plan is not None
+        if plan is not None:
+            self.tree_query = plan.tree_query
+            self.core_query = plan.core_query
+            self.attachment = plan.attachment
+            self.core_vars = sorted(
+                {v for a in plan.core_query.atoms for v in a.vars})
 
 
 class HybridJoin:
     """Tree counts × seeded core LFTJ (the paper's hybrid algorithm)."""
 
-    def __init__(self, query: Query, gdb: GraphDB, **vlftj_kw):
+    def __init__(self, query: Query, gdb: GraphDB,
+                 plan: JoinPlan | None = None, **vlftj_kw):
+        if plan is None:
+            from .planner import plan_query
+            plan = plan_query(query, GraphStats.of(gdb), engine="hybrid")
         self.query = query
         self.gdb = gdb
-        self.decomp = HybridDecomposition(query)
+        self.join_plan = plan
+        self.decomp = HybridDecomposition(query, plan=plan.decomposition)
         self.vlftj_kw = vlftj_kw
+        # precompile the core (or fallback) executor plan so repeated
+        # executions of a cached hybrid plan never re-enter the planner
+        d = plan.decomposition
+        if d is not None:
+            self._core_plan = JoinPlan(query=d.core_query, engine="vlftj",
+                                       gao=d.core_gao)
+        elif plan.gao:
+            self._core_plan = JoinPlan(query=query, engine="vlftj",
+                                       gao=plan.gao)
+        else:
+            self._core_plan = None
 
     def count(self) -> int:
-        d = self.decomp
-        if not d.applicable:
+        d = self.join_plan.decomposition
+        if d is None:
+            if self._core_plan is not None:
+                return VLFTJ(self.query, self.gdb, plan=self._core_plan,
+                             **self.vlftj_kw).count()
             return VLFTJ(self.query, self.gdb, **self.vlftj_kw).count()
         # 1) tree part -> multiplicity vector at the attachment variable
         cy = CountingYannakakis(d.tree_query, self.gdb, root=d.attachment)
@@ -145,9 +88,8 @@ class HybridJoin:
         if seeds.size == 0:
             return 0
         # 2) core part: GAO = attachment first, then cyclic heuristic
-        rest = _cyclic_heuristic_order(d.core_query)
-        gao = (d.attachment,) + tuple(v for v in rest if v != d.attachment)
-        engine = VLFTJ(d.core_query, self.gdb, gao=gao, **self.vlftj_kw)
+        engine = VLFTJ(d.core_query, self.gdb, plan=self._core_plan,
+                       **self.vlftj_kw)
         return engine.seeded_count(seeds, msg[seeds])
 
 

@@ -14,6 +14,7 @@ from __future__ import annotations
 import numpy as np
 
 from .gao import choose_gao
+from .plan import JoinPlan
 from .query import Query
 from .relation import Database, Relation, POS_INF
 
@@ -55,10 +56,14 @@ class LFTJ:
     """Paper-faithful LeapFrog TrieJoin over a :class:`Database`."""
 
     def __init__(self, query: Query, db: Database,
-                 gao: tuple[str, ...] | None = None):
+                 gao: tuple[str, ...] | None = None,
+                 plan: JoinPlan | None = None):
         self.query = query
         self.db = db
-        self.gao = tuple(gao) if gao is not None else choose_gao(query)
+        self.join_plan = plan
+        if gao is None:
+            gao = plan.gao if plan is not None else choose_gao(query)
+        self.gao = tuple(gao)
         self.var_pos = {v: i for i, v in enumerate(self.gao)}
         # GAO-consistent index per atom: columns sorted by GAO position.
         self.atom_perm = []

@@ -42,6 +42,7 @@ import numpy as np
 
 from .gao import choose_gao
 from .hypergraph import Hypergraph, is_beta_acyclic
+from .plan import JoinPlan
 from .query import Query
 from .relation import Database, NEG_INF, POS_INF
 
@@ -230,10 +231,14 @@ class Minesweeper:
                  gao: tuple[str, ...] | None = None,
                  skip_probes: bool = True,   # Idea 4
                  use_skeleton: bool = True,  # Idea 7
+                 plan: "JoinPlan | None" = None,
                  ):
         self.query = query
         self.db = db
-        self.gao = tuple(gao) if gao is not None else choose_gao(query)
+        self.join_plan = plan
+        if gao is None:
+            gao = plan.gao if plan is not None else choose_gao(query)
+        self.gao = tuple(gao)
         self.n = len(self.gao)
         self.var_pos = {v: i for i, v in enumerate(self.gao)}
         self.skip_probes = skip_probes

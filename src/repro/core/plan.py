@@ -1,0 +1,210 @@
+"""Physical query-plan IR: the frozen, hashable contract between planner
+and engines.
+
+The paper's thesis is that one relational engine covers graph workloads;
+EmptyHeaded-style systems push that further by *compiling* a logical plan
+once and executing it many times.  This module is the plan half of that
+split: a :class:`JoinPlan` captures every decision the engines used to
+re-derive at construction time — engine choice, global attribute order
+(GAO), per-level constraint sets, hybrid tree/core decomposition,
+Yannakakis root — plus cost annotations (AGM bound, per-level estimates)
+so plans can be ranked, cached, and shipped to executors.
+
+Everything here is a frozen dataclass built from tuples, so plans are
+hashable and usable directly as cache keys.  ``repro.core.planner`` builds
+plans; the engines in ``repro.core.*`` execute them.
+"""
+from __future__ import annotations
+
+import hashlib
+import math
+from dataclasses import dataclass, field
+
+from .query import Query
+
+
+def pow2ceil(x: int) -> int:
+    return 1 << max(0, (x - 1)).bit_length()
+
+
+def executor_geometry(max_degree: int, chunk_rows: int = 8192,
+                      elem_budget: int = 1 << 22,
+                      width: int | None = None) -> tuple[int, int]:
+    """(width, chunk_rows) padding geometry of the vectorized executor.
+
+    Single source of truth shared by ``VLFTJ.__init__`` and the planner's
+    cost model — a level's true work is the padded element count, so the
+    two must price the same geometry.
+    """
+    width = width or max(8, pow2ceil(max_degree))
+    chunk = max(64, min(chunk_rows, pow2ceil(elem_budget // width)))
+    return width, chunk
+
+
+@dataclass(frozen=True)
+class LevelPlan:
+    """Static per-level constraint sets (indices into frontier columns).
+
+    One entry per GAO level; consumed by the vectorized LFTJ kernels (the
+    fields are the static arguments of ``vlftj._expand_level``).
+    """
+
+    var: str
+    edge_sources: tuple[int, ...]   # frontier cols adjacent via edge atoms
+    unary: tuple[str, ...]          # unary relation names constraining var
+    lower: tuple[int, ...]          # filters: cand > frontier[:, j]
+    upper: tuple[int, ...]          # filters: cand < frontier[:, j]
+    needs_degree: bool              # var also appears with later-bound vars
+
+
+def compile_levels(query: Query, gao: tuple[str, ...]
+                   ) -> tuple[LevelPlan, ...]:
+    """Compile a query + GAO into per-level constraint sets."""
+    pos = {v: i for i, v in enumerate(gao)}
+    plans = []
+    for level, var in enumerate(gao):
+        edge_sources: list[int] = []
+        unary: list[str] = []
+        needs_degree = False
+        for a in query.atoms:
+            if var not in a.vars:
+                continue
+            if a.arity == 1:
+                unary.append(a.rel)
+            elif a.arity == 2:
+                other = a.vars[0] if a.vars[1] == var else a.vars[1]
+                if other == var:
+                    continue  # self-loop atom edge(v,v); not benchmarked
+                if pos[other] < level:
+                    edge_sources.append(pos[other])
+                else:
+                    needs_degree = True
+            else:
+                raise ValueError("vectorized engine supports graph queries "
+                                 "(unary/binary atoms) only")
+        lower = [pos[f.left] for f in query.filters
+                 if f.right == var and pos[f.left] < level]
+        upper = [pos[f.right] for f in query.filters
+                 if f.left == var and pos[f.right] < level]
+        plans.append(LevelPlan(var, tuple(sorted(set(edge_sources))),
+                               tuple(unary), tuple(lower), tuple(upper),
+                               needs_degree))
+    return tuple(plans)
+
+
+@dataclass(frozen=True)
+class HybridPlan:
+    """Tree/core split for the hybrid engine (§4.12 lollipop algorithm)."""
+
+    tree_query: Query
+    core_query: Query
+    attachment: str
+    core_gao: tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class GraphStats:
+    """Summary statistics of a :class:`GraphDB` used for cost estimation.
+
+    The planner only ever sees these — never the data — so a plan is a
+    pure function of ``(query, stats)`` and can be cached across requests
+    that share a stats fingerprint.
+    """
+
+    n_nodes: int
+    n_edges: int
+    max_degree: int
+    avg_degree: float
+    unary_sizes: tuple[tuple[str, int], ...]  # sorted (name, |set|)
+
+    @classmethod
+    def of(cls, gdb) -> "GraphStats":
+        csr = gdb.csr
+        n = max(1, csr.n_nodes)
+        n_edges = int(csr.indices.shape[0])
+        return cls(
+            n_nodes=csr.n_nodes,
+            n_edges=n_edges,
+            max_degree=int(csr.max_degree),
+            avg_degree=n_edges / n,
+            unary_sizes=tuple(sorted(
+                (name, int(len(ids))) for name, ids in gdb.unary.items())),
+        )
+
+    def unary_selectivity(self, name: str) -> float:
+        """|unary set| / n_nodes, defaulting to 1.0 for unknown names."""
+        n = max(1, self.n_nodes)
+        for u, size in self.unary_sizes:
+            if u == name:
+                return min(1.0, size / n)
+        return 1.0
+
+    def relation_sizes(self, query: Query) -> dict[str, int]:
+        """Relation-name -> cardinality map for the AGM bound."""
+        sizes: dict[str, int] = {}
+        for name, size in self.unary_sizes:
+            sizes[name] = size
+        for a in query.atoms:
+            if a.rel not in sizes:
+                sizes[a.rel] = self.n_edges if a.arity == 2 else self.n_nodes
+        return sizes
+
+    def fingerprint(self) -> str:
+        """Stable short digest — the plan-cache invalidation token."""
+        payload = repr((self.n_nodes, self.n_edges, self.max_degree,
+                        round(self.avg_degree, 6), self.unary_sizes))
+        return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+@dataclass(frozen=True)
+class JoinPlan:
+    """A complete physical plan: what to run, in what order, at what cost.
+
+    ``engine`` is the physical operator ('vlftj', 'yannakakis', 'hybrid',
+    'lftj_ref', 'minesweeper_ref', 'binary'); ``gao`` the global attribute
+    order; ``levels`` the compiled per-level constraints (vectorized-LFTJ
+    family); ``decomposition`` the hybrid tree/core split; ``root`` the
+    Yannakakis message-passing root.  ``est_cost`` / ``level_costs`` are
+    the planner's estimates and ``agm_log2`` the log2 AGM bound — the
+    annotations ``benchmarks/bench_planner.py`` correlates against actual
+    runtimes.  ``stats_fingerprint`` records the GraphStats the plan was
+    costed against.
+    """
+
+    query: Query
+    engine: str
+    gao: tuple[str, ...]
+    levels: tuple[LevelPlan, ...] = ()
+    decomposition: HybridPlan | None = None
+    root: str | None = None
+    est_cost: float = 0.0
+    level_costs: tuple[float, ...] = ()
+    agm_log2: float | None = None
+    stats_fingerprint: str = ""
+
+    def __post_init__(self):
+        if self.engine in ("vlftj", "lftj_ref") and not self.levels \
+                and self.gao:
+            try:
+                object.__setattr__(
+                    self, "levels", compile_levels(self.query, self.gao))
+            except ValueError:
+                pass  # non-graph atoms: the executing engine decides
+
+    @property
+    def agm_bound(self) -> float:
+        if self.agm_log2 is None:
+            return math.inf
+        return 2.0 ** self.agm_log2
+
+    def describe(self) -> str:
+        """One-line human-readable summary (for logs / benchmarks)."""
+        parts = [f"{self.query.name} -> {self.engine}",
+                 f"gao={''.join(self.gao)}"]
+        if self.decomposition is not None:
+            parts.append(f"core={''.join(self.decomposition.core_gao)}"
+                         f"@{self.decomposition.attachment}")
+        if self.root is not None:
+            parts.append(f"root={self.root}")
+        parts.append(f"cost~2^{math.log2(max(self.est_cost, 1.0)):.1f}")
+        return " ".join(parts)

@@ -23,8 +23,6 @@ LFTJ's bindings, and per-level work is O(probe segment + emitted · log N)
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -33,57 +31,13 @@ import numpy as np
 
 from ..kernels import ops as kops
 from .device_graph import GraphDB
-from .gao import choose_gao
+from .plan import (GraphStats, JoinPlan, LevelPlan, compile_levels,
+                   executor_geometry)
 from .query import Query
 
-
-def _pow2ceil(x: int) -> int:
-    return 1 << max(0, (x - 1)).bit_length()
-
-
-@dataclass(frozen=True)
-class LevelPlan:
-    """Static per-level constraint sets (indices into frontier columns)."""
-
-    var: str
-    edge_sources: tuple[int, ...]   # frontier cols adjacent via edge atoms
-    unary: tuple[str, ...]          # unary relation names constraining var
-    lower: tuple[int, ...]          # filters: cand > frontier[:, j]
-    upper: tuple[int, ...]          # filters: cand < frontier[:, j]
-    needs_degree: bool              # var also appears with later-bound vars
-
-
-def compile_plan(query: Query, gao: tuple[str, ...]) -> tuple[LevelPlan, ...]:
-    pos = {v: i for i, v in enumerate(gao)}
-    plans = []
-    for level, var in enumerate(gao):
-        edge_sources: list[int] = []
-        unary: list[str] = []
-        needs_degree = False
-        for a in query.atoms:
-            if var not in a.vars:
-                continue
-            if a.arity == 1:
-                unary.append(a.rel)
-            elif a.arity == 2:
-                other = a.vars[0] if a.vars[1] == var else a.vars[1]
-                if other == var:
-                    continue  # self-loop atom edge(v,v); not benchmarked
-                if pos[other] < level:
-                    edge_sources.append(pos[other])
-                else:
-                    needs_degree = True
-            else:
-                raise ValueError("vectorized engine supports graph queries "
-                                 "(unary/binary atoms) only")
-        lower = [pos[f.left] for f in query.filters
-                 if f.right == var and pos[f.left] < level]
-        upper = [pos[f.right] for f in query.filters
-                 if f.left == var and pos[f.right] < level]
-        plans.append(LevelPlan(var, tuple(sorted(set(edge_sources))),
-                               tuple(unary), tuple(lower), tuple(upper),
-                               needs_degree))
-    return tuple(plans)
+#: backward-compatible alias — the per-level compiler now lives in
+#: ``core.plan`` so the planner and the engine share one definition.
+compile_plan = compile_levels
 
 
 # ---------------------------------------------------------------------------
@@ -205,13 +159,23 @@ class VLFTJ:
                  check_mode: str = "bsearch",
                  tile_width: int = 512,
                  rotate_checks: bool = False,
-                 summary_stride: int = 128):
+                 summary_stride: int = 128,
+                 plan: JoinPlan | None = None):
+        if plan is None:
+            # plan-free construction is a thin wrapper over the planner
+            from .planner import plan_query
+            plan = plan_query(query, GraphStats.of(gdb), engine="vlftj",
+                              gao=gao)
+        elif gao is not None and tuple(gao) != plan.gao:
+            raise ValueError("both plan= and a conflicting gao= given")
         self.query = query
         self.gdb = gdb
-        self.gao = tuple(gao) if gao is not None else choose_gao(query)
-        self.plan = compile_plan(query, self.gao)
+        self.join_plan = plan
+        self.gao = plan.gao
+        self.plan = plan.levels or compile_levels(query, self.gao)
         self.n_iter = gdb.bsearch_iters
-        self.width = width or max(8, _pow2ceil(gdb.max_degree))
+        self.width, self._chunk_cap = executor_geometry(
+            gdb.max_degree, chunk_rows, elem_budget, width)
         # membership strategy: 'bsearch' (log-round binary search),
         # 'auto' (degree-bucketed: rows whose check segments fit
         # ``tile_width`` take the gather-once tile-compare path — the
@@ -227,8 +191,7 @@ class VLFTJ:
             self.n_iter2 = int(_math.ceil(_math.log2(2 * summary_stride
                                                      + 2))) + 1
         # keep chunk x width under the element budget
-        self.chunk_rows = max(64, min(chunk_rows,
-                                      _pow2ceil(elem_budget // self.width)))
+        self.chunk_rows = self._chunk_cap
         self.stats = {"chunks": 0, "frontier_peak": 0, "candidates": 0,
                       "tile_rows": 0, "bsearch_rows": 0}
 

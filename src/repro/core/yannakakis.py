@@ -29,6 +29,7 @@ import numpy as np
 
 from .device_graph import GraphDB
 from .hypergraph import Hypergraph, is_beta_acyclic
+from .plan import JoinPlan
 from .query import Query
 
 
@@ -89,17 +90,21 @@ class CountingYannakakis:
     """Count β-acyclic graph patterns in O(#query-edges) SpMV passes."""
 
     def __init__(self, query: Query, gdb: GraphDB,
-                 root: str | None = None):
+                 root: str | None = None,
+                 plan: JoinPlan | None = None):
         hg = Hypergraph.of(query)
         if not is_beta_acyclic(hg):
             raise NotTreeShaped("query is β-cyclic; use vlftj or hybrid")
         self.query = query
         self.gdb = gdb
+        self.join_plan = plan
         self.adj = variable_tree(query)
         self.unary_of: dict[str, list[str]] = {v: [] for v in query.variables}
         for a in query.atoms:
             if a.arity == 1:
                 self.unary_of[a.vars[0]].append(a.rel)
+        if root is None and plan is not None and plan.root is not None:
+            root = plan.root
         self.root = root or query.variables[0]
         self.stats = {"spmvs": 0}
 

@@ -50,13 +50,19 @@ def _intersect_kernel(a_ref, alen_ref, b_ref, blen_ref, out_ref, *,
         b_valid = b_col < blen
         b_min = jnp.min(jnp.where(b_valid, b, big))
         b_max = jnp.max(jnp.where(b_valid, b, -1))
-        # gap-box skip: disjoint [a_min,a_max] x [b_min,b_max]
+        # gap-box skip: disjoint [a_min,a_max] x [b_min,b_max] tile pairs
+        # branch around the dense compare entirely — a skipped pair pays
+        # only the scalar bounds check, no (R, TILE, TILE) VPU work
         overlap = (a_min <= b_max) & (b_min <= a_max)
-        eq = (a[:, :, None] == b[:, None, :])
-        eq &= a_valid[:, :, None] & b_valid[:, None, :]
-        hit = eq.any(axis=2)                               # (R, TILE)
-        add = jnp.where(overlap, hit.sum(axis=1,
-                                         dtype=jnp.int32), 0)
+
+        def dense_compare(_):
+            eq = (a[:, :, None] == b[:, None, :])
+            eq &= a_valid[:, :, None] & b_valid[:, None, :]
+            hit = eq.any(axis=2)                           # (R, TILE)
+            return hit.sum(axis=1, dtype=jnp.int32)
+
+        add = jax.lax.cond(overlap, dense_compare,
+                           lambda _: jnp.zeros((rows,), jnp.int32), None)
         return count + add
 
     count = jax.lax.fori_loop(0, n_b_tiles, b_tile_body,

@@ -30,6 +30,17 @@ from jax.sharding import PartitionSpec as P
 from .common import act_fn, normal_init
 
 
+def _shard_map(f, mesh, in_specs, out_specs, check_vma=True):
+    """``jax.shard_map`` when available (jax >= 0.6), else the
+    ``jax.experimental`` spelling with its older ``check_rep`` kwarg."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=check_vma)
+
+
 @dataclass(frozen=True)
 class MoEConfig:
     n_experts: int
@@ -155,7 +166,7 @@ def moe_ffn(x, params_layer, cfg: MoEConfig, mesh, *, act: str = "silu",
             aux = jax.lax.pmean(aux, ax)
         return out.reshape(x_loc.shape).astype(dtype), aux
 
-    y, aux = jax.shard_map(
+    y, aux = _shard_map(
         f, mesh=mesh,
         in_specs=(P(dataxes, None, None), P(), wspec, wspec, wdspec),
         out_specs=(P(dataxes, None, None), P()),

@@ -1,3 +1,3 @@
-from .query_server import QueryRequest, QueryServer
+from .query_server import QueryRequest, QueryResult, QueryServer
 
-__all__ = ["QueryRequest", "QueryServer"]
+__all__ = ["QueryRequest", "QueryResult", "QueryServer"]

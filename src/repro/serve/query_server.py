@@ -2,20 +2,26 @@
 
 The RDBMS story of the paper is interactive: clients submit pattern
 queries (with per-request node samples / selectivities) against a resident
-graph.  ``QueryServer`` keeps the device-resident CSR trie warm, routes
-each request to the winning engine (auto heuristic from the benchmark
-summary: Minesweeper-analogue for acyclic, hybrid for lollipops, LFTJ for
-cyclic), executes batches of requests, and reports per-request latency —
-the serving analogue of Table 6/7.
+graph.  ``QueryServer`` keeps the device-resident CSR trie warm and now
+serves through the plan/execute split (``core.plan`` / ``core.planner``):
+
+  * every request is planned once into a :class:`~repro.core.plan.JoinPlan`
+    and executed via ``core.engine.execute``;
+  * plans are memoized in an LRU :class:`~repro.core.planner.PlanCache`
+    keyed by (query structure, stats fingerprint), so repeated pattern
+    shapes skip planning entirely — ``plan_cache_info()`` exposes the
+    hit/miss counters;
+  * ``execute_many`` groups same-plan requests so the vectorized LFTJ's
+    jitted level kernels (whose static shapes depend only on the plan)
+    amortize compilation across the group.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import numpy as np
-
-from ..core import GraphDB, count as engine_count, get_query, pick_engine
+from ..core import GraphDB, GraphStats, JoinPlan, PlanCache, execute, \
+    get_query
 from ..graphs import CSRGraph, node_sample
 
 
@@ -33,13 +39,18 @@ class QueryResult:
     count: int
     engine: str
     latency_s: float
+    plan: JoinPlan | None = None
+    plan_cached: bool = False
 
 
 class QueryServer:
-    def __init__(self, csr: CSRGraph, default_selectivity: float = 10.0):
+    def __init__(self, csr: CSRGraph, default_selectivity: float = 10.0,
+                 plan_cache_size: int = 256):
         self.csr = csr
         self.default_selectivity = default_selectivity
         self._warm: dict = {}
+        self._stats: dict = {}
+        self.plan_cache = PlanCache(maxsize=plan_cache_size)
 
     def _gdb_for(self, selectivity: float, seed: int) -> GraphDB:
         key = (round(selectivity, 6), seed)
@@ -50,14 +61,34 @@ class QueryServer:
             self._warm[key] = GraphDB(self.csr, unary)
         return self._warm[key]
 
-    def execute(self, req: QueryRequest) -> QueryResult:
+    def _stats_for(self, gdb: GraphDB) -> GraphStats:
+        key = id(gdb)
+        if key not in self._stats:
+            self._stats[key] = GraphStats.of(gdb)
+        return self._stats[key]
+
+    def _plan_for(self, req: QueryRequest, gdb: GraphDB
+                  ) -> tuple[JoinPlan, bool]:
+        """(plan, was_cache_hit) for one request."""
         q = get_query(req.query_name)
+        stats = self._stats_for(gdb)
+        hits_before = self.plan_cache.hits
+        plan = self.plan_cache.get_or_plan(q, stats, req.engine)
+        return plan, self.plan_cache.hits > hits_before
+
+    def plan_cache_info(self) -> dict:
+        return {"hits": self.plan_cache.hits,
+                "misses": self.plan_cache.misses,
+                "size": len(self.plan_cache)}
+
+    def execute(self, req: QueryRequest) -> QueryResult:
         sel = req.selectivity or self.default_selectivity
         gdb = self._gdb_for(sel, req.seed)
-        engine = req.engine if req.engine != "auto" else pick_engine(q)
         t0 = time.time()
-        c = engine_count(q, gdb, engine=engine)
-        return QueryResult(req, c, engine, time.time() - t0)
+        plan, cached = self._plan_for(req, gdb)
+        c = execute(plan, gdb)
+        return QueryResult(req, c, plan.engine, time.time() - t0,
+                           plan=plan, plan_cached=cached)
 
     def execute_batch(self, reqs: list[QueryRequest]) -> list[QueryResult]:
         # group by (selectivity, seed) so the device graph stays warm
@@ -67,4 +98,36 @@ class QueryServer:
         results: list[QueryResult | None] = [None] * len(reqs)
         for i in order:
             results[i] = self.execute(reqs[i])
+        return results  # type: ignore
+
+    def execute_many(self, reqs: list[QueryRequest]) -> list[QueryResult]:
+        """Plan-grouped batched execution.
+
+        Requests are planned first (warming the plan cache), then grouped
+        by (plan, graph) and executed group-by-group: consecutive
+        executions of the same plan reuse the jitted level kernels —
+        their static shapes are a function of the plan alone — so one
+        cold compile amortizes over the whole group, and the device
+        graph stays warm within a group.
+        """
+        prepared = []   # (index, plan, cached, gdb, plan_s)
+        for i, req in enumerate(reqs):
+            sel = req.selectivity or self.default_selectivity
+            gdb = self._gdb_for(sel, req.seed)
+            t0 = time.time()
+            plan, cached = self._plan_for(req, gdb)
+            prepared.append((i, plan, cached, gdb, time.time() - t0))
+        # same-plan requests become adjacent; ties keep graph groups warm
+        groups: dict[tuple, list] = {}
+        for item in prepared:
+            groups.setdefault((item[1], id(item[3])), []).append(item)
+        results: list[QueryResult | None] = [None] * len(reqs)
+        for (_plan, _gid), items in groups.items():
+            for i, plan, cached, gdb, plan_s in items:
+                t0 = time.time()
+                c = execute(plan, gdb)
+                # latency_s matches execute(): planning share + execution
+                results[i] = QueryResult(
+                    reqs[i], c, plan.engine, plan_s + time.time() - t0,
+                    plan=plan, plan_cached=cached)
         return results  # type: ignore

@@ -1,0 +1,98 @@
+"""Property-testing shim: real hypothesis when installed, else a small
+deterministic fallback.
+
+The test suite's property tests use a narrow slice of the hypothesis API
+(``given``/``settings`` and the ``integers``/``sampled_from``/``lists``/
+``tuples`` strategies).  When hypothesis is unavailable (the CPU container
+does not ship it), the fallback below replays each property as
+``max_examples`` deterministically-seeded random examples — weaker than
+real shrinking-and-database hypothesis, but the same assertions run on
+every CI pass instead of erroring at collection.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+
+    import numpy as np
+
+    class _Strategy:
+        def sample(self, rng):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, min_value=0, max_value=1 << 30):
+            self.lo, self.hi = min_value, max_value
+
+        def sample(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def sample(self, rng):
+            return self.elements[int(rng.integers(len(self.elements)))]
+
+    class _Lists(_Strategy):
+        def __init__(self, elements, min_size=0, max_size=10):
+            self.elements = elements
+            self.min_size, self.max_size = min_size, max_size
+
+        def sample(self, rng):
+            size = int(rng.integers(self.min_size, self.max_size + 1))
+            return [self.elements.sample(rng) for _ in range(size)]
+
+    class _Tuples(_Strategy):
+        def __init__(self, *elements):
+            self.elements = elements
+
+        def sample(self, rng):
+            return tuple(e.sample(rng) for e in self.elements)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        integers = staticmethod(_Integers)
+        sampled_from = staticmethod(_SampledFrom)
+        lists = staticmethod(_Lists)
+        tuples = staticmethod(_Tuples)
+
+    _DEFAULT_EXAMPLES = 12
+
+    def given(*st_args, **st_kwargs):
+        def deco(fn):
+            import inspect
+            params = list(inspect.signature(fn).parameters.values())
+            # positional strategies fill the RIGHTMOST parameters
+            # (hypothesis semantics); bind them by name so fixtures —
+            # which pytest supplies as keywords — can coexist
+            pos_names = [p.name for p in params[len(params) - len(st_args):]]
+
+            @functools.wraps(fn)
+            def wrapper(*fixture_args, **fixture_kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(n):
+                    kwargs = {name: s.sample(rng)
+                              for name, s in zip(pos_names, st_args)}
+                    kwargs.update({k: s.sample(rng)
+                                   for k, s in st_kwargs.items()})
+                    fn(*fixture_args, **fixture_kwargs, **kwargs)
+
+            # hide the strategy-filled parameters from pytest's fixture
+            # resolution
+            remaining = params[:len(params) - len(st_args)]
+            remaining = [p for p in remaining if p.name not in st_kwargs]
+            wrapper.__signature__ = inspect.Signature(remaining)
+            return wrapper
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -7,7 +7,7 @@ hypothesis-generated random graphs and samples.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (GraphDB, Minesweeper, PAPER_QUERIES, count,
                         get_query, pick_engine)

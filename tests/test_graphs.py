@@ -2,7 +2,7 @@
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import GraphDB, count, get_query
 from repro.graphs import CSRGraph, load_edgelist, save_edgelist

@@ -70,6 +70,24 @@ def test_intersect_sweep(r, la, lb):
         assert int(np.asarray(c2)[i]) == expect
 
 
+def test_intersect_disjoint_tiles_skip_path():
+    """Tile pairs with disjoint value ranges take the gap-box skip branch
+    (lax.cond) — counts must match the oracle exactly either way."""
+    # A in [0, 512), B in [100000, 100512): every tile pair disjoint
+    a = np.tile(np.arange(512, dtype=np.int32), (8, 1))
+    b = a + 100000
+    full = np.full(8, 512, np.int32)
+    c = intersect_count_pallas(jnp.asarray(a), jnp.asarray(full),
+                               jnp.asarray(b), jnp.asarray(full))
+    assert np.asarray(c).sum() == 0
+    # mixed: second half of B overlaps A's range
+    b2 = np.concatenate([a[:, :256] + 100000, a[:, :256]], axis=1)
+    b2 = np.sort(b2, axis=1)
+    c2 = intersect_count_pallas(jnp.asarray(a), jnp.asarray(full),
+                                jnp.asarray(b2), jnp.asarray(full))
+    np.testing.assert_array_equal(np.asarray(c2), np.full(8, 256))
+
+
 def test_intersect_empty_rows():
     a = np.zeros((8, 128), np.int32)
     b = np.zeros((8, 128), np.int32)

@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from numpy.testing import assert_allclose
 
 from repro.kernels.ref import (searchsorted_segments_2level_ref,

@@ -1,6 +1,6 @@
 """CDS internals: interval lists, constraints, truncation (Ideas 1-5)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.minesweeper_ref import (CDS, Constraint, IntervalList,
                                         STAR, _chain_bottom, _generalizes)

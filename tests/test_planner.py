@@ -1,0 +1,262 @@
+"""Plan IR + cost-based planner + plan cache.
+
+Every engine must produce the oracle count when handed an explicit
+:class:`JoinPlan`; the plan cache must hit on repeated query structure and
+invalidate when the graph-stats fingerprint changes; the server must serve
+repeated shapes from the cache.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (ENGINES, GraphDB, GraphStats, JoinPlan, PlanCache,
+                        count, execute, get_query, lftj_count, pick_engine,
+                        plan_query)
+from repro.core.planner import candidate_gaos, candidate_plans, \
+    decompose_hybrid
+from repro.graphs import CSRGraph
+
+from conftest import make_gdb
+
+# cyclic, acyclic, and lollipop-shaped shapes from the paper suite
+PLAN_QUERIES = ["3-clique", "4-clique", "4-cycle",          # cyclic
+                "3-path", "2-comb", "1-tree",               # acyclic
+                "2-lollipop", "3-lollipop"]                 # lollipop
+
+ALL_ENGINES = [e for e in ENGINES if e != "auto"]
+
+
+@pytest.fixture(scope="module")
+def gdb():
+    return make_gdb(50, 3, seed=3)
+
+
+@pytest.fixture(scope="module")
+def stats(gdb):
+    return GraphStats.of(gdb)
+
+
+@pytest.fixture(scope="module")
+def oracle(gdb):
+    return {q: lftj_count(get_query(q), gdb.to_database())
+            for q in PLAN_QUERIES}
+
+
+# -- plan construction -------------------------------------------------------
+
+@pytest.mark.parametrize("qname", PLAN_QUERIES)
+def test_plans_are_frozen_and_hashable(stats, qname):
+    q = get_query(qname)
+    p1 = plan_query(q, stats)
+    p2 = plan_query(q, stats)
+    assert isinstance(p1, JoinPlan)
+    assert p1 == p2 and hash(p1) == hash(p2)     # deterministic + hashable
+    assert {p1: "v"}[p2] == "v"                  # usable as a dict key
+    with pytest.raises(Exception):
+        p1.engine = "other"                      # frozen
+    if p1.decomposition is None:
+        assert set(p1.gao) == set(q.variables)
+    else:  # hybrid plans carry the cyclic-core GAO only
+        assert set(p1.gao) == set(p1.decomposition.core_gao)
+    assert p1.est_cost > 0
+    assert p1.stats_fingerprint == stats.fingerprint()
+
+
+@pytest.mark.parametrize("qname", PLAN_QUERIES)
+def test_plan_cost_annotations(stats, qname):
+    q = get_query(qname)
+    p = plan_query(q, stats, engine="vlftj")
+    assert len(p.levels) == len(p.gao)
+    assert len(p.level_costs) == len(p.gao)
+    assert p.agm_log2 is not None
+    assert np.isfinite(p.agm_log2)
+
+
+def test_planner_picks_cheapest_candidate(stats):
+    q = get_query("3-path")
+    plans = candidate_plans(q, stats)
+    auto = plan_query(q, stats)
+    assert auto.est_cost == min(p.est_cost for p in plans)
+
+
+def test_candidate_gaos_include_legacy_pick():
+    from repro.core import choose_gao
+    for qname in PLAN_QUERIES:
+        q = get_query(qname)
+        assert choose_gao(q) in candidate_gaos(q)
+
+
+def test_hybrid_decomposition_lives_in_planner():
+    hp = decompose_hybrid(get_query("2-lollipop"))
+    assert hp is not None
+    assert hp.attachment == "c"
+    assert hp.core_gao[0] == "c"
+    assert decompose_hybrid(get_query("3-clique")) is None
+    assert decompose_hybrid(get_query("3-path")) is None
+
+
+# -- every engine executes an explicit plan ----------------------------------
+
+@pytest.mark.parametrize("qname", PLAN_QUERIES)
+@pytest.mark.parametrize("engine", ALL_ENGINES)
+def test_engine_agrees_on_explicit_plan(gdb, stats, oracle, qname, engine):
+    from repro.core.yannakakis import NotTreeShaped
+    q = get_query(qname)
+    try:
+        plan = plan_query(q, stats, engine=engine)
+    except NotTreeShaped:
+        assert engine == "yannakakis"   # only counts filter-free forests
+        return
+    assert plan.engine == engine
+    assert execute(plan, gdb) == oracle[qname], (qname, engine)
+
+
+@pytest.mark.parametrize("qname", PLAN_QUERIES)
+def test_auto_plan_agrees(gdb, stats, oracle, qname):
+    q = get_query(qname)
+    plan = plan_query(q, stats, engine="auto")
+    assert execute(plan, gdb) == oracle[qname], (qname, plan.engine)
+    assert count(q, gdb, engine="auto") == oracle[qname]
+    assert count(q, gdb, plan=plan) == oracle[qname]
+
+
+def test_engines_accept_plan_constructor_kw(gdb, stats, oracle):
+    """The six engine classes all take plan= directly."""
+    from repro.core import (VLFTJ, LFTJ, BinaryJoin, CountingYannakakis,
+                            HybridJoin, Minesweeper)
+    db = gdb.to_database()
+    q = get_query("3-clique")
+    p = plan_query(q, stats, engine="vlftj")
+    assert VLFTJ(q, gdb, plan=p).count() == oracle["3-clique"]
+    assert LFTJ(q, db, plan=plan_query(q, stats, engine="lftj_ref")
+                ).count() == oracle["3-clique"]
+    assert Minesweeper(q, db, plan=plan_query(
+        q, stats, engine="minesweeper_ref")).count() == oracle["3-clique"]
+    assert BinaryJoin(q, db, plan=plan_query(
+        q, stats, engine="binary")).count() == oracle["3-clique"]
+    qt = get_query("3-path")
+    assert CountingYannakakis(qt, gdb, plan=plan_query(
+        qt, stats, engine="yannakakis")).count() == oracle["3-path"]
+    ql = get_query("2-lollipop")
+    assert HybridJoin(ql, gdb, plan=plan_query(
+        ql, stats, engine="hybrid")).count() == oracle["2-lollipop"]
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(10, 30),
+       density=st.integers(1, 4))
+def test_property_planned_engines_agree(seed, n, density):
+    rng = np.random.default_rng(seed)
+    m = n * density
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    if not keep.any():
+        return
+    g = CSRGraph.from_edges(src[keep], dst[keep], n_nodes=n)
+    unary = {f"v{i}": rng.choice(n, max(1, n // 3), replace=False)
+             for i in range(1, 5)}
+    gdb = GraphDB(g, unary)
+    stats = GraphStats.of(gdb)
+    for qname in ["3-clique", "4-cycle", "3-path", "2-comb", "2-lollipop"]:
+        q = get_query(qname)
+        ref = lftj_count(q, gdb.to_database())
+        for engine in ("vlftj", "auto"):
+            plan = plan_query(q, stats, engine=engine)
+            assert execute(plan, gdb) == ref, (qname, plan.engine)
+
+
+# -- routing ----------------------------------------------------------------
+
+def test_pick_engine_structural_matches_paper_heuristic():
+    assert pick_engine(get_query("3-clique")) == "vlftj"
+    assert pick_engine(get_query("3-path")) == "yannakakis"
+    assert pick_engine(get_query("2-lollipop")) == "hybrid"
+
+
+def test_pick_engine_cost_based_routes_all(stats):
+    for qname in PLAN_QUERIES:
+        assert pick_engine(get_query(qname), stats) in ALL_ENGINES
+
+
+# -- plan cache -------------------------------------------------------------
+
+def test_plan_cache_hit_miss(stats):
+    cache = PlanCache()
+    q = get_query("4-cycle")
+    p1 = cache.get_or_plan(q, stats)
+    assert (cache.hits, cache.misses) == (0, 1)
+    p2 = cache.get_or_plan(q, stats)
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert p1 is p2
+    # a different requested engine is a different entry
+    cache.get_or_plan(q, stats, engine="vlftj")
+    assert cache.misses == 2
+
+
+def test_plan_cache_keyed_by_structure_not_name(stats):
+    from repro.core import Query
+    cache = PlanCache()
+    q = get_query("3-clique")
+    renamed = Query(q.atoms, q.filters, "same-shape-different-name")
+    cache.get_or_plan(q, stats)
+    cache.get_or_plan(renamed, stats)
+    assert (cache.hits, cache.misses) == (1, 1)
+
+
+def test_plan_cache_stats_fingerprint_invalidation():
+    gdb_a = make_gdb(50, 3, seed=3)
+    gdb_b = make_gdb(50, 3, seed=4)     # different graph + samples
+    sa, sb = GraphStats.of(gdb_a), GraphStats.of(gdb_b)
+    assert sa.fingerprint() != sb.fingerprint()
+    cache = PlanCache()
+    q = get_query("3-clique")
+    cache.get_or_plan(q, sa)
+    cache.get_or_plan(q, sb)            # stats changed -> replan
+    assert (cache.hits, cache.misses) == (0, 2)
+    cache.get_or_plan(q, sa)
+    assert cache.hits == 1
+
+
+def test_plan_cache_lru_eviction(stats):
+    cache = PlanCache(maxsize=2)
+    qs = [get_query(n) for n in ["3-clique", "4-cycle", "3-path"]]
+    for q in qs:
+        cache.get_or_plan(q, stats)
+    assert len(cache) == 2
+    cache.get_or_plan(qs[0], stats)     # evicted -> replanned
+    assert cache.misses == 4
+
+
+# -- server integration -----------------------------------------------------
+
+def test_query_server_plan_cache_counter():
+    from repro.graphs import powerlaw_cluster
+    from repro.serve import QueryRequest, QueryServer
+    srv = QueryServer(powerlaw_cluster(200, 3, seed=1))
+    req = QueryRequest("3-clique", selectivity=8, seed=0)
+    r1 = srv.execute(req)
+    assert not r1.plan_cached
+    r2 = srv.execute(req)
+    assert r2.plan_cached                       # repeated shape: cache hit
+    assert r1.count == r2.count
+    info = srv.plan_cache_info()
+    assert info["hits"] >= 1 and info["misses"] == 1
+
+
+def test_query_server_execute_many_matches_batch():
+    from repro.graphs import powerlaw_cluster
+    from repro.serve import QueryRequest, QueryServer
+    g = powerlaw_cluster(200, 3, seed=2)
+    reqs = [QueryRequest(n, selectivity=8, seed=0)
+            for n in ["3-clique", "3-path", "3-clique", "2-lollipop",
+                      "3-path", "3-clique"]]
+    srv_a, srv_b = QueryServer(g), QueryServer(g)
+    batch = srv_a.execute_batch(list(reqs))
+    many = srv_b.execute_many(list(reqs))
+    assert [r.count for r in many] == [r.count for r in batch]
+    assert [r.engine for r in many] == [r.engine for r in batch]
+    # 3 distinct shapes -> 3 misses, the rest plan-cache hits
+    info = srv_b.plan_cache_info()
+    assert info["misses"] == 3 and info["hits"] == 3

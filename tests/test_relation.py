@@ -1,6 +1,6 @@
 """Sorted-array trie: range navigation + gaps vs numpy oracles."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import Database, Relation
 from repro.core.relation import NEG_INF, POS_INF
