@@ -7,7 +7,7 @@ runtime guarantee is measured against.
 """
 from __future__ import annotations
 
-from repro.core import agm_bound, count, fractional_edge_cover, get_query
+from repro.core import count, fractional_edge_cover, get_query
 
 from .common import Row, bench_gdb, timed
 

@@ -1,0 +1,180 @@
+"""Distributed scaling benchmark: sharded join throughput + compression.
+
+Two measurements, written to ``BENCH_dist.json`` by ``record_baseline``:
+
+* ``join/<n>shard`` — one vectorized-LFTJ triangle expansion level over
+  the full edge frontier via ``dist.spmd_join_step``, frontier
+  row-sharded over 1 vs every forced host device (CI runs with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on real
+  accelerators the same code path shards over the physical mesh).  The
+  derived field carries rows/s and the verified triangle count.
+* ``train/{uncompressed,compressed}_step`` + ``loss_curves`` — the tiny
+  transformer's *sharded* data-parallel train step with an f32-pmean
+  wire (``make_dp_train_step``) vs the int8 error-feedback compressed
+  wire (``make_compressed_train_step``) — same mesh and batch split, so
+  the timing gap isolates compression; both loss trajectories are kept
+  so compression quality regressions show up as curve divergence, not
+  just speed.
+
+Run standalone (``python -m benchmarks.bench_dist``) this module forces
+8 host devices before jax initializes; under ``benchmarks.run`` it
+measures whatever device count the process already has.
+"""
+import os
+import sys
+
+if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
+        not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+import json
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import GraphDB, VLFTJ, get_query
+from repro.core.plan import executor_geometry
+from repro.dist.compressed_step import (init_compressed_state,
+                                        make_compressed_train_step,
+                                        make_dp_train_step)
+from repro.dist.sharded_join import spmd_join_step
+from repro.graphs import powerlaw_cluster
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.train.optimizer import OptimizerConfig, init_opt_state
+
+from .common import Row, timed
+
+
+def _mesh(n_shards: int) -> Mesh:
+    return Mesh(np.array(jax.devices()[:n_shards]), ("data",))
+
+
+def _triangle_frontier(g, pad_to: int):
+    ea = g.edge_array()
+    fr = ea[ea[:, 0] < ea[:, 1]].astype(np.int32)
+    pad = (-len(fr)) % pad_to
+    fr = np.pad(fr, ((0, pad), (0, 0)))
+    mult = np.ones(len(fr), np.int64)
+    if pad:
+        mult[len(fr) - pad:] = 0
+    return fr, mult
+
+
+def _join_rows(quick: bool) -> list[Row]:
+    rows: list[Row] = []
+    g = powerlaw_cluster(1200 if quick else 4000, 6, seed=0)
+    gdb = GraphDB(g, {})
+    n_dev = jax.device_count()
+    fr, mult = _triangle_frontier(g, pad_to=n_dev)
+    width, _ = executor_geometry(gdb.max_degree)
+    kw = dict(probe_cols=(0, 1), n_unary=0, lower_cols=(1,), upper_cols=(),
+              width=width, n_iter=gdb.bsearch_iters, needs_degree=False)
+    ref = VLFTJ(get_query("3-clique"), gdb).count()
+    args = (gdb.dev("indptr"), gdb.dev("indices"),
+            jnp.asarray(fr), jnp.asarray(mult))
+    for shards in sorted({1, n_dev}):
+        step = spmd_join_step(_mesh(shards), kw)
+        total = int(step(*args))                      # warm + verify
+        assert total == ref, (total, ref)
+        _, us = timed(lambda: int(step(*args)), repeats=5, timeout_s=120)
+        rps = len(fr) / (us / 1e6)
+        rows.append(Row(f"join/{shards}shard", us,
+                        f"rows={len(fr)};rows_per_s={rps:.0f};"
+                        f"triangles={total}"))
+    return rows
+
+
+def _train_rows(quick: bool) -> tuple[list[Row], dict]:
+    rows: list[Row] = []
+    cfg = TransformerConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
+                            n_kv_heads=2, d_ff=128, vocab_size=256,
+                            dtype=jnp.float32, remat=False)
+    n_dev = jax.device_count()
+    mesh = _mesh(n_dev)
+    oc = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    n_steps = 12 if quick else 30
+    p0 = init_params(jax.random.PRNGKey(0), cfg)
+
+    def lf(p, b):
+        return loss_fn(p, b, cfg)
+
+    def batch_at(s):
+        rng = np.random.default_rng(s)
+        toks = rng.integers(0, 64, (16, 32), dtype=np.int32)
+        return {"tokens": toks, "labels": (toks * 3 + 7) % 256}
+
+    curves: dict = {"n_devices": n_dev, "steps": n_steps}
+    for compressed in (False, True):
+        p = jax.tree.map(jnp.copy, p0)
+        opt = init_opt_state(p)
+        err = init_compressed_state(p, mesh)
+        step_c = make_compressed_train_step(lf, oc, mesh)
+        # fair baseline: the same sharded DP step over an f32 wire, so
+        # the timing gap isolates compression, not data parallelism
+        step_u = make_dp_train_step(lf, oc, mesh)
+        losses, times = [], []
+        for s in range(n_steps):
+            batch = batch_at(s)
+            t0 = time.time()
+            if compressed:
+                p, opt, err, m = step_c(p, opt, err, batch)
+            else:
+                p, opt, m = step_u(p, opt, batch)
+            jax.block_until_ready(m["loss"])
+            times.append(time.time() - t0)
+            losses.append(round(float(m["loss"]), 5))
+        name = "compressed" if compressed else "uncompressed"
+        curves[name] = losses
+        us = float(np.median(times[1:])) * 1e6       # skip the compile step
+        rows.append(Row(f"train/{name}_step", us,
+                        f"loss0={losses[0]:.3f};lossN={losses[-1]:.3f}"))
+    return rows, curves
+
+
+def run(quick: bool = True) -> list[Row]:
+    rows = _join_rows(quick)
+    train_rows, _ = _train_rows(quick)
+    return rows + train_rows
+
+
+def record_baseline(path: str | None = None, quick: bool = True) -> dict:
+    """Write BENCH_dist.json: shard scaling + compression loss curves."""
+    rows = _join_rows(quick)
+    train_rows, curves = _train_rows(quick)
+    payload = {
+        "bench": "dist",
+        "quick": quick,
+        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 2),
+                  "derived": r.derived} for r in rows + train_rows],
+        "loss_curves": curves,
+    }
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_dist.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description="distributed join/compression "
+                                             "scaling benchmark")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the BENCH json here instead of CSV rows")
+    a = ap.parse_args()
+    if a.out:
+        payload = record_baseline(path=a.out, quick=a.quick)
+        print(f"wrote {a.out} ({len(payload['rows'])} rows)")
+    else:
+        for row in run(quick=a.quick):
+            print(row.csv())

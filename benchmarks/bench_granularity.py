@@ -7,7 +7,6 @@ Reported: runtime normalized to f=1, plus the worker-load imbalance
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import get_query
 from repro.dist.sharded_join import PartitionedJoin

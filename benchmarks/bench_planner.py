@@ -125,5 +125,18 @@ def record_baseline(path: str | None = None, quick: bool = True) -> dict:
 
 
 if __name__ == "__main__":
-    for row in run():
-        print(row.csv())
+    import argparse
+
+    ap = argparse.ArgumentParser(description="planner latency + cost-model "
+                                             "fidelity benchmark")
+    ap.add_argument("--quick", action="store_true",
+                    help="small graph scale (the CI smoke profile)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the BENCH json here instead of CSV rows")
+    args = ap.parse_args()
+    if args.out:
+        payload = record_baseline(path=args.out, quick=args.quick)
+        print(f"wrote {args.out} ({len(payload['rows'])} rows)")
+    else:
+        for row in run(quick=args.quick):
+            print(row.csv())

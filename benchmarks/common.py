@@ -12,7 +12,6 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 
-import numpy as np
 
 from repro.core import GraphDB
 from repro.graphs import node_sample

@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: cyclic,acyclic,ideas,gao,"
-                         "granularity,scaling,agm,planner")
+                         "granularity,scaling,agm,planner,dist")
     args = ap.parse_args()
     quick = not args.full
 
@@ -29,6 +29,7 @@ def main() -> None:
         "selectivity": "bench_selectivity",    # Figures 3-5
         "agm": "bench_agm",                # Appendix A
         "planner": "bench_planner",        # plan cache + cost model
+        "dist": "bench_dist",              # sharded join + compression
     }
     chosen = (args.only.split(",") if args.only else list(modules))
     unknown = [k for k in chosen if k not in modules]

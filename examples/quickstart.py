@@ -2,7 +2,6 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core import GraphDB, agm_bound, count, get_query, pick_engine
 from repro.graphs import node_sample, powerlaw_cluster
@@ -27,7 +26,7 @@ for qname in ["3-clique", "4-clique", "3-path", "2-comb"]:
 
 # 3) the same counts from the Selinger-style pairwise baseline — watch
 #    the intermediate blow up on the cyclic patterns
-from repro.core import BinaryJoin, JoinBlowup
+from repro.core import BinaryJoin
 bj = BinaryJoin(get_query("3-clique"), gdb.to_database())
 print("pairwise 3-clique:", bj.count(),
       f"(max intermediate {bj.stats['max_intermediate']:,} rows — "

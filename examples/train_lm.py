@@ -10,7 +10,6 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.data import LMTokenPipeline
 from repro.models.transformer import TransformerConfig, init_params, loss_fn
 from repro.train.loop import Trainer
 from repro.train.optimizer import OptimizerConfig

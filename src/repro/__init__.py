@@ -12,4 +12,19 @@ import jax as _jax
 if _os.environ.get("REPRO_X64", "1") == "1":
     _jax.config.update("jax_enable_x64", True)
 
+if not hasattr(_jax, "shard_map"):
+    # jax >= 0.6 promotes shard_map to the top-level namespace and renames
+    # check_rep -> check_vma; older jax only has the experimental spelling.
+    # repro.dist and the multi-device tests target the new API, so bridge
+    # it here (importing any repro subpackage runs this first).
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                   **kwargs):
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma,
+                                 **kwargs)
+
+    _jax.shard_map = _shard_map
+
 __version__ = "1.0.0"

@@ -9,7 +9,6 @@ recsys (train / online / bulk / retrieval), wcoj (the paper's engine).
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -17,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..layers.moe import MoEConfig
 from ..models import transformer as tfm
 from ..models.gnn import data as gnn_data
 from ..models import xdeepfm as xdf

@@ -1,5 +1,4 @@
 """gatedgcn [arXiv:2003.00982]: 16 layers, d_hidden=70, gated aggregator."""
-from functools import partial
 
 from ..models.gnn.gatedgcn import (GatedGCNConfig, gatedgcn_loss,
                                    init_gatedgcn)

@@ -13,7 +13,6 @@ Shapes (graph scales mirror §5.1's largest datasets):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ from .hypergraph import Hypergraph, all_neos, is_beta_acyclic, is_neo
 from .lftj_ref import LFTJ, lftj_count
 from .minesweeper_ref import Minesweeper, minesweeper_count
 from .plan import (GraphStats, HybridPlan, JoinPlan, LevelPlan,
-                   compile_levels)
+                   compile_levels, partition_first_level, stripe_partition)
 from .planner import (PlanCache, candidate_gaos, candidate_plans,
                       decompose_hybrid, estimate_vlftj_cost, plan_query)
 from .query import (Atom, LessThan, PAPER_QUERIES, Query, clique, comb,
@@ -23,7 +23,8 @@ __all__ = [
     "pick_engine", "choose_gao", "HybridJoin", "hybrid_count",
     "Hypergraph", "all_neos", "is_beta_acyclic", "is_neo", "LFTJ",
     "lftj_count", "Minesweeper", "minesweeper_count", "GraphStats",
-    "HybridPlan", "JoinPlan", "LevelPlan", "compile_levels", "PlanCache",
+    "HybridPlan", "JoinPlan", "LevelPlan", "compile_levels",
+    "partition_first_level", "stripe_partition", "PlanCache",
     "candidate_gaos", "candidate_plans", "decompose_hybrid",
     "estimate_vlftj_cost", "plan_query", "Atom", "LessThan",
     "PAPER_QUERIES", "Query", "clique", "comb", "cycle", "get_query",

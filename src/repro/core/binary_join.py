@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import numpy as np
 
-from .plan import JoinPlan
 from .query import Query
 from .relation import Database
 

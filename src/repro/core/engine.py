@@ -31,7 +31,7 @@ from .plan import GraphStats, JoinPlan
 from .planner import PlanCache, decompose_hybrid, plan_query
 from .query import Query
 from .vlftj import VLFTJ
-from .yannakakis import CountingYannakakis, NotTreeShaped
+from .yannakakis import CountingYannakakis
 
 ENGINES = ("lftj_ref", "minesweeper_ref", "binary", "vlftj", "yannakakis",
            "hybrid", "auto")

@@ -42,7 +42,6 @@ import numpy as np
 
 from .gao import choose_gao
 from .hypergraph import Hypergraph, is_beta_acyclic
-from .plan import JoinPlan
 from .query import Query
 from .relation import Database, NEG_INF, POS_INF
 

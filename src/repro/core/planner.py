@@ -32,9 +32,9 @@ from itertools import permutations
 from .agm import fractional_edge_cover
 from .gao import _cyclic_heuristic_order, choose_gao
 from .hypergraph import Hypergraph, all_neos, is_beta_acyclic
-from .plan import (GraphStats, HybridPlan, JoinPlan, LevelPlan,
-                   compile_levels, executor_geometry)
-from .query import Atom, LessThan, Query
+from .plan import (GraphStats, HybridPlan, JoinPlan, compile_levels,
+                   executor_geometry)
+from .query import Atom, Query
 
 #: engines the auto-planner will route to (the reference/baseline engines
 #: are only planned when explicitly requested).

@@ -9,8 +9,7 @@ and unary sample predicates ``v1``, ``v2``, ...
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
-from typing import Iterable
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -12,7 +12,6 @@ requirement that each relation have a GAO-consistent index.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache
 
 import numpy as np
 

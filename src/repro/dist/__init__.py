@@ -1,0 +1,36 @@
+"""Distributed execution: sharded WCOJ, collective overlap, compression.
+
+The paper's evaluation runs worst-case-optimal joins across parallel
+workers; EmptyHeaded-style systems get their order-of-magnitude wins from
+partitioned execution of the same plans.  This package is that layer for
+the reproduction, in two complementary halves:
+
+* **SPMD device sharding** (``sharded_join``): one jitted expansion level
+  or counting SpMV running identically on every device of a jax mesh via
+  ``shard_map``, frontier/edge rows sharded, one ``psum`` per step.
+* **Host work partitioning** (``sharded_join.PartitionedJoin``): the
+  paper's granularity-factor over-partitioning — the first GAO level's
+  seed domain is dealt into ``n_workers x granularity`` cost-balanced
+  parts and scheduled statically, so a straggling worker delays at most
+  one small part (see ``train.stragglers`` for the re-deal policy).
+
+``overlap`` and ``compression`` serve the training side of the repo: a
+ring all-reduce, chunked reduce/apply overlap, and int8-quantized psum
+with per-device error feedback, wired into a data-parallel train step by
+``compressed_step``.
+"""
+from . import compressed_step, compression, overlap, sharded_join
+from .compressed_step import (init_compressed_state,
+                              make_compressed_train_step,
+                              make_dp_train_step, resize_compressed_state)
+from .compression import compressed_psum_leaf, compressed_psum_tree
+from .overlap import overlapped_reduce_apply, ring_all_reduce
+from .sharded_join import PartitionedJoin, spmd_join_step, spmd_spmv_step
+
+__all__ = [
+    "compressed_step", "compression", "overlap", "sharded_join",
+    "init_compressed_state", "make_compressed_train_step",
+    "make_dp_train_step", "resize_compressed_state", "compressed_psum_leaf",
+    "compressed_psum_tree", "overlapped_reduce_apply", "ring_all_reduce",
+    "PartitionedJoin", "spmd_join_step", "spmd_spmv_step",
+]

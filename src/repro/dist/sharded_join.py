@@ -1,0 +1,159 @@
+"""Sharded worst-case-optimal join execution.
+
+Two granularities of parallelism, matching the paper's evaluation setup:
+
+* :func:`spmd_join_step` / :func:`spmd_spmv_step` — device-level SPMD.
+  The frontier (or edge list) is row-sharded over a jax mesh; every
+  device runs the *same* jitted expansion level (``vlftj._expand_level``,
+  reused verbatim — the kernel never learns it is distributed) against a
+  replicated CSR, and a single ``psum`` folds the per-shard counts.
+  Binding-space sharding means no shuffle: a partial binding's whole
+  subtree lives on the shard that owns the seed row.
+
+* :class:`PartitionedJoin` — host-level static over-partitioning (the
+  granularity factor).  The first GAO level's domain is dealt into
+  ``n_workers x granularity`` cost-balanced parts
+  (:func:`repro.core.plan.partition_first_level`); parts go to workers
+  with the same deterministic deal as
+  :func:`repro.train.stragglers.reassign_shards`, so a dead worker's
+  parts can be re-dealt without recomputing anything.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.device_graph import GraphDB
+from ..core.plan import JoinPlan, partition_first_level
+from ..core.query import Query
+from ..core.vlftj import VLFTJ, _expand_level
+from ..train.stragglers import reassign_shards
+
+
+def spmd_join_step(mesh, level_kw: dict, axis_names=None):
+    """Build a sharded expansion-level counter over ``mesh``.
+
+    ``level_kw`` holds the static kernel arguments of
+    ``vlftj._expand_level`` (probe_cols, lower_cols, width, n_iter, ...).
+    The returned function maps ``(indptr, indices, frontier, mult)`` to
+    the global weighted count: CSR replicated, frontier/mult row-sharded
+    over every mesh axis in ``axis_names`` (default: all axes — a join
+    has no MXU work for a model axis, but its HBM bandwidth is real, see
+    ``configs/wcoj.py``).  Frontier rows must divide the shard count;
+    callers pad and zero the padding's ``mult``, which the kernel's
+    ``counts * mult`` weighting nullifies.
+    """
+    axes = tuple(mesh.axis_names) if axis_names is None else tuple(axis_names)
+    kw = dict(level_kw)
+    kw.setdefault("count_only", True)
+
+    def local_step(indptr, indices, frontier, mult):
+        row_valid = jnp.ones((frontier.shape[0],), bool)
+        counts = _expand_level(indptr, indices, (), frontier, mult,
+                               row_valid, **kw)
+        return jax.lax.psum(counts.sum(), axes)
+
+    return jax.jit(jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P(), P(axes), P(axes)),
+        out_specs=P(), check_vma=False))
+
+
+def spmd_spmv_step(mesh, n_nodes: int, axis_names=None):
+    """Edge-sharded counting SpMV (the #Minesweeper message pass, Idea 8).
+
+    The returned function maps ``(indices, src_ids, c)`` to
+    ``y[v] = sum_{(v,u) in E} c[u]``: edges (``indices``/``src_ids``)
+    row-sharded, the count vector ``c`` replicated, per-shard
+    segment-sums psum-folded into the replicated output.  Edge rows must
+    divide the shard count (trim or pad to the shard boundary).
+    """
+    axes = tuple(mesh.axis_names) if axis_names is None else tuple(axis_names)
+
+    def local_step(indices, src_ids, c):
+        part = jax.ops.segment_sum(c[indices], src_ids,
+                                   num_segments=n_nodes)
+        return jax.lax.psum(part, axes)
+
+    return jax.jit(jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(axes), P(axes), P()),
+        out_specs=P(), check_vma=False))
+
+
+class PartitionedJoin:
+    """Granularity-factor partitioned WCOJ (host-level work splitting).
+
+    Splits the first GAO level's seed domain into
+    ``n_workers * granularity`` cost-balanced parts and runs each part as
+    a seeded count on the shared :class:`~repro.core.vlftj.VLFTJ`
+    executor.  Parts are dealt to workers statically (part ``p`` to
+    worker ``p % n_workers``; with ``dead`` workers, survivors pick up
+    the orphaned parts via the same deterministic re-deal the training
+    loop uses).  Execution here is sequential per-process — the point is
+    the partition/schedule layer, whose ``stats`` expose the makespan a
+    real worker pool would see.
+
+    ``stats`` after :meth:`count`:
+
+    * ``parts`` — number of parts (``n_workers * granularity``);
+    * ``part_sizes`` — seeds per part (balanced to within one);
+    * ``part_time`` / ``part_counts`` — per-part seconds and counts;
+    * ``worker_time`` — per-worker summed part time (len ``n_workers``;
+      dead workers stay at 0.0);
+    * ``makespan`` — max worker time, ``<= total_time`` always;
+    * ``total_time`` — summed part time (single-worker equivalent).
+    """
+
+    def __init__(self, query: Query, gdb: GraphDB, n_workers: int = 4,
+                 granularity: int = 2, plan: JoinPlan | None = None,
+                 dead: frozenset[int] | set[int] = frozenset(), **vlftj_kw):
+        if n_workers < 1 or granularity < 1:
+            raise ValueError("n_workers and granularity must be >= 1")
+        self.executor = VLFTJ(query, gdb, plan=plan, **vlftj_kw)
+        self.query = query
+        self.gdb = gdb
+        self.n_workers = n_workers
+        self.granularity = granularity
+        self.n_parts = n_workers * granularity
+        seeds = self.executor._domain_values(self.executor.plan[0])
+        self.parts = partition_first_level(
+            self.executor.join_plan, seeds, gdb.csr.degrees, self.n_parts)
+        self.schedule = reassign_shards(n_workers, set(dead), granularity)
+        self.stats: dict = {
+            "parts": self.n_parts,
+            "part_sizes": [int(p.shape[0]) for p in self.parts],
+        }
+
+    def count(self) -> int:
+        part_time = np.zeros(self.n_parts)
+        part_counts = np.zeros(self.n_parts, dtype=np.int64)
+        total = 0
+        for pid, seeds in enumerate(self.parts):
+            t0 = time.perf_counter()
+            c = self.executor.seeded_count(
+                seeds.astype(np.int32),
+                np.ones(seeds.shape[0], dtype=np.int64))
+            part_time[pid] = time.perf_counter() - t0
+            part_counts[pid] = c
+            total += c
+        worker_time = [0.0] * self.n_workers
+        for worker, owned in self.schedule.items():
+            worker_time[worker] = float(part_time[owned].sum())
+        self.stats.update({
+            "part_time": part_time.tolist(),
+            "part_counts": part_counts.tolist(),
+            "worker_time": worker_time,
+            "makespan": max(worker_time),
+            "total_time": float(part_time.sum()),
+        })
+        return int(total)
+
+
+def partitioned_count(query: Query, gdb: GraphDB, n_workers: int = 4,
+                      granularity: int = 2, **kw) -> int:
+    return PartitionedJoin(query, gdb, n_workers, granularity, **kw).count()

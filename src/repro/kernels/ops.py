@@ -8,9 +8,7 @@ dry-run.
 from __future__ import annotations
 
 import os
-from functools import partial
 
-import jax
 
 from . import ref as _ref
 

@@ -13,10 +13,8 @@ the production meshes.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro  # noqa: F401

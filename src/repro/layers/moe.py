@@ -21,24 +21,12 @@ static shapes.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .common import act_fn, normal_init
-
-
-def _shard_map(f, mesh, in_specs, out_specs, check_vma=True):
-    """``jax.shard_map`` when available (jax >= 0.6), else the
-    ``jax.experimental`` spelling with its older ``check_rep`` kwarg."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=check_vma)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_rep=check_vma)
 
 
 @dataclass(frozen=True)
@@ -166,7 +154,9 @@ def moe_ffn(x, params_layer, cfg: MoEConfig, mesh, *, act: str = "silu",
             aux = jax.lax.pmean(aux, ax)
         return out.reshape(x_loc.shape).astype(dtype), aux
 
-    y, aux = _shard_map(
+    # jax.shard_map exists on every supported jax: repro/__init__ bridges
+    # the pre-0.6 experimental spelling (check_rep -> check_vma)
+    y, aux = jax.shard_map(
         f, mesh=mesh,
         in_specs=(P(dataxes, None, None), P(), wspec, wspec, wdspec),
         out_specs=(P(dataxes, None, None), P()),

@@ -17,13 +17,12 @@ Everything is explicit-dtype (bf16 activations / f32 router & softmax).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..kernels import ops as kops

@@ -13,7 +13,12 @@ serves through the plan/execute split (``core.plan`` / ``core.planner``):
     hit/miss counters;
   * ``execute_many`` groups same-plan requests so the vectorized LFTJ's
     jitted level kernels (whose static shapes depend only on the plan)
-    amortize compilation across the group.
+    amortize compilation across the group;
+  * graphs at or above ``dist_edge_threshold`` directed edges route
+    their ``vlftj`` plans through
+    :class:`repro.dist.sharded_join.PartitionedJoin` (granularity-factor
+    work splitting; the result's engine label gains ``+partitioned`` and
+    ``last_dist_stats`` exposes the partition makespan).
 """
 from __future__ import annotations
 
@@ -45,12 +50,48 @@ class QueryResult:
 
 class QueryServer:
     def __init__(self, csr: CSRGraph, default_selectivity: float = 10.0,
-                 plan_cache_size: int = 256):
+                 plan_cache_size: int = 256,
+                 dist_edge_threshold: int | None = 1 << 22,
+                 dist_workers: int = 4, dist_granularity: int = 2):
         self.csr = csr
         self.default_selectivity = default_selectivity
         self._warm: dict = {}
         self._stats: dict = {}
         self.plan_cache = PlanCache(maxsize=plan_cache_size)
+        # graphs at or above dist_edge_threshold directed edges run their
+        # vlftj plans through dist.PartitionedJoin (granularity-factor
+        # over-partitioning); None disables the route entirely.
+        self.dist_edge_threshold = dist_edge_threshold
+        self.dist_workers = dist_workers
+        self.dist_granularity = dist_granularity
+        self.last_dist_stats: dict | None = None
+        self._dist_joins: dict = {}
+
+    def _routes_to_dist(self, plan: JoinPlan, gdb: GraphDB) -> bool:
+        return (self.dist_edge_threshold is not None
+                and plan.engine == "vlftj"
+                and gdb.csr.n_edges >= self.dist_edge_threshold)
+
+    def _execute_plan(self, plan: JoinPlan, gdb: GraphDB,
+                      req: QueryRequest) -> tuple[int, str]:
+        """(count, engine label); large graphs take the partitioned path."""
+        if self._routes_to_dist(plan, gdb):
+            from ..dist.sharded_join import PartitionedJoin
+            # memoize per (plan, graph): the seed-domain sort and the
+            # part schedule amortize over same-plan request groups just
+            # like the jitted level kernels do
+            key = (plan, id(gdb))
+            pj = self._dist_joins.get(key)
+            if pj is None:
+                pj = PartitionedJoin(get_query(req.query_name), gdb,
+                                     n_workers=self.dist_workers,
+                                     granularity=self.dist_granularity,
+                                     plan=plan)
+                self._dist_joins[key] = pj
+            c = pj.count()
+            self.last_dist_stats = pj.stats
+            return c, plan.engine + "+partitioned"
+        return execute(plan, gdb), plan.engine
 
     def _gdb_for(self, selectivity: float, seed: int) -> GraphDB:
         key = (round(selectivity, 6), seed)
@@ -86,8 +127,8 @@ class QueryServer:
         gdb = self._gdb_for(sel, req.seed)
         t0 = time.time()
         plan, cached = self._plan_for(req, gdb)
-        c = execute(plan, gdb)
-        return QueryResult(req, c, plan.engine, time.time() - t0,
+        c, label = self._execute_plan(plan, gdb, req)
+        return QueryResult(req, c, label, time.time() - t0,
                            plan=plan, plan_cached=cached)
 
     def execute_batch(self, reqs: list[QueryRequest]) -> list[QueryResult]:
@@ -125,9 +166,9 @@ class QueryServer:
         for (_plan, _gid), items in groups.items():
             for i, plan, cached, gdb, plan_s in items:
                 t0 = time.time()
-                c = execute(plan, gdb)
+                c, label = self._execute_plan(plan, gdb, reqs[i])
                 # latency_s matches execute(): planning share + execution
                 results[i] = QueryResult(
-                    reqs[i], c, plan.engine, plan_s + time.time() - t0,
+                    reqs[i], c, label, plan_s + time.time() - t0,
                     plan=plan, plan_cached=cached)
         return results  # type: ignore

@@ -11,12 +11,10 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .checkpoint import CheckpointManager
 from .optimizer import OptimizerConfig, adamw_update, init_opt_state

@@ -6,7 +6,6 @@ all moments are f32 regardless of param dtype.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,7 @@
-import numpy as np
 import pytest
 
 import repro  # noqa: F401  (enables x64; device count stays at 1 here)
-from repro.core import Database, GraphDB, Relation
+from repro.core import GraphDB
 from repro.graphs import node_sample, powerlaw_cluster
 
 

@@ -4,7 +4,6 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
 
 from repro.train.stragglers import StepTimeTracker, reassign_shards

@@ -1,7 +1,6 @@
 """Graph substrate vs networkx oracles."""
 import networkx as nx
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import GraphDB, count, get_query

@@ -1,6 +1,5 @@
 """Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from numpy.testing import assert_allclose

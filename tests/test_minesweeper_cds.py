@@ -1,10 +1,8 @@
 """CDS internals: interval lists, constraints, truncation (Ideas 1-5)."""
-import numpy as np
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.minesweeper_ref import (CDS, Constraint, IntervalList,
                                         STAR, _chain_bottom, _generalizes)
-from repro.core.relation import NEG_INF, POS_INF
 
 
 def test_interval_merge_open_semantics():

@@ -1,8 +1,6 @@
 """Query IR, hypergraph, NEO/GAO, and AGM-bound unit tests."""
 import math
 
-import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (Hypergraph, PAPER_QUERIES, agm_bound, all_neos,

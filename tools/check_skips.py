@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Skip-budget gate: fail CI when pytest skipped anything off-allowlist.
+
+Usage: python tools/check_skips.py <junit-report.xml> [allowlist.txt]
+
+The allowlist (default ``tests/skip_allowlist.txt``) holds one entry per
+line, ``#`` comments allowed.  An entry matches a skipped test when it
+equals the test id (``classname::name``) or is its parametrize prefix
+(id starts with ``entry[``).  Any skipped test without a match fails the
+build — so a test un-skipped by a landed feature (e.g. ``repro.dist``)
+can never silently start skipping again.  Stale allowlist entries (no
+longer skipping) are reported as warnings so the budget only shrinks.
+"""
+from __future__ import annotations
+
+import sys
+import xml.etree.ElementTree as ET
+
+
+def load_allowlist(path: str) -> list[str]:
+    try:
+        with open(path) as f:
+            lines = f.read().splitlines()
+    except FileNotFoundError:
+        return []
+    return [ln.strip() for ln in lines
+            if ln.strip() and not ln.strip().startswith("#")]
+
+
+def skipped_ids(report: str) -> list[str]:
+    tree = ET.parse(report)
+    out = []
+    for case in tree.iter("testcase"):
+        if case.find("skipped") is not None:
+            out.append(f"{case.get('classname')}::{case.get('name')}")
+    return out
+
+
+def matches(test_id: str, entry: str) -> bool:
+    return test_id == entry or test_id.startswith(entry + "[")
+
+
+def main(argv: list[str]) -> int:
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__)
+        return 2
+    report = argv[0]
+    try:
+        ET.parse(report)
+    except (OSError, ET.ParseError) as e:
+        print(f"cannot read junit report {report!r}: {e}")
+        return 2
+    allowlist_path = argv[1] if len(argv) > 1 else "tests/skip_allowlist.txt"
+    allowed = load_allowlist(allowlist_path)
+    skipped = skipped_ids(report)
+
+    unexpected = [s for s in skipped
+                  if not any(matches(s, e) for e in allowed)]
+    stale = [e for e in allowed
+             if not any(matches(s, e) for s in skipped)]
+    print(f"skip budget: {len(skipped)} skipped, "
+          f"{len(allowed)} allowlisted, {len(unexpected)} unexpected")
+    for e in stale:
+        print(f"  warning: stale allowlist entry (no longer skips): {e}")
+    if unexpected:
+        print("unexpected skips (add a feature, not an allowlist entry):")
+        for s in unexpected:
+            print(f"  {s}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
