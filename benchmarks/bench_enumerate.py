@@ -1,0 +1,124 @@
+"""Enumeration throughput/memory benchmark: flat vs chunked vs factorized.
+
+Three emission strategies over the same vectorized-LFTJ plans, written
+to ``BENCH_enumerate.json`` by ``record_baseline``:
+
+* ``<q>/flat`` — ``VLFTJ.enumerate()``: materialize + lex-sort the full
+  output.  Derived: rows/s and the materialized bytes (the peak).
+* ``<q>/chunked`` — ``ResultCursor`` pages (``core.engine.stream``):
+  the final GAO level re-entered per frontier chunk, pages concatenated
+  but never co-resident.  Derived: rows/s, page count, and
+  ``peak_rows`` — the cursor's tail-buffer high-water mark, the number
+  the bounded-memory contract is about (compare it against
+  ``rows`` for the flat strategy).
+* ``<q>/factorized`` — ``results.factorize_vlftj``: the trie build that
+  never materializes the flat cross-product.  Derived: rows/s
+  (expanded-row equivalents), trie bytes, and the compression ratio
+  versus flat.
+
+Queries: ``3-clique`` (dense core, fanout ~1) and ``3-path`` (the
+high-fanout shape where factorization and chunking pay off).
+"""
+import json
+import os
+
+from repro.core import GraphDB, GraphStats, VLFTJ, get_query
+from repro.core import engine as engine_mod
+from repro.core.planner import plan_query
+from repro.graphs import node_sample, powerlaw_cluster
+from repro.results import factorize_vlftj
+
+from .common import Row, timed
+
+QUERIES = ("3-clique", "3-path")
+PAGE_ROWS = 4096
+
+
+def _gdb(quick: bool) -> GraphDB:
+    g = powerlaw_cluster(1000 if quick else 3000, 5, seed=0)
+    unary = {f"v{i}": node_sample(g.n_nodes, 8, seed=i)
+             for i in range(1, 5)}
+    return GraphDB(g, unary)
+
+
+def run(quick: bool = True) -> list[Row]:
+    rows: list[Row] = []
+    gdb = _gdb(quick)
+    stats = GraphStats.of(gdb)
+    for qname in QUERIES:
+        q = get_query(qname)
+        plan = plan_query(q, stats, engine="vlftj", output="rows")
+
+        def flat():
+            return VLFTJ(q, gdb, plan=plan).enumerate()
+
+        out, us = timed(flat, repeats=3)
+        n = out.shape[0]
+        rps = n / max(us, 1e-9) * 1e6
+        rows.append(Row(f"{qname}/flat", us,
+                        f"rows={n};rows_per_s={rps:.0f};"
+                        f"bytes={out.nbytes};peak_rows={n}"))
+
+        def chunked():
+            cur = engine_mod.stream(q, gdb, plan=plan,
+                                    page_rows=PAGE_ROWS)
+            total = 0
+            for page in cur:
+                total += page.shape[0]
+            return cur, total
+
+        (cur, total), us = timed(chunked, repeats=3)
+        assert total == n, (total, n)
+        rows.append(Row(
+            f"{qname}/chunked", us,
+            f"rows={n};rows_per_s={n / max(us, 1e-9) * 1e6:.0f};"
+            f"pages={cur.stats['pages']};"
+            f"peak_rows={cur.stats['peak_buffer_rows']}"))
+
+        def fact():
+            return factorize_vlftj(VLFTJ(q, gdb, plan=plan))
+
+        fr, us = timed(fact, repeats=3)
+        assert fr.count() == n, (fr.count(), n)
+        ratio = out.nbytes / max(1, fr.nbytes)
+        rows.append(Row(
+            f"{qname}/factorized", us,
+            f"rows={n};rows_per_s={n / max(us, 1e-9) * 1e6:.0f};"
+            f"bytes={fr.nbytes};flat_over_fact={ratio:.2f}"))
+    return rows
+
+
+def record_baseline(path: str | None = None, quick: bool = True) -> dict:
+    """Write BENCH_enumerate.json: flat vs chunked vs factorized."""
+    rows = run(quick=quick)
+    payload = {
+        "bench": "enumerate",
+        "quick": quick,
+        "page_rows": PAGE_ROWS,
+        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 2),
+                  "derived": r.derived} for r in rows],
+    }
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_enumerate.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="enumeration flat/chunked/factorized benchmark")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the BENCH json here instead of CSV rows")
+    a = ap.parse_args()
+    if a.out:
+        payload = record_baseline(path=a.out, quick=a.quick)
+        print(f"wrote {a.out} ({len(payload['rows'])} rows)")
+    else:
+        for row in run(quick=a.quick):
+            print(row.csv())

@@ -201,13 +201,27 @@ class BinaryJoin:
     def count(self) -> int:
         return len(self.run())
 
-    def enumerate(self, gao: tuple[str, ...]) -> np.ndarray:
+    def enumerate(self, limit: int | None = None) -> np.ndarray:
+        """Output tuples: int64, columns in GAO order
+        (``self.output_vars`` — the plan's GAO), rows sorted
+        lexicographically; ``limit`` truncates after the ordering (the
+        shared engine contract, ``repro.results``)."""
         inter = self.run()
-        cols = [inter.vars.index(v) for v in gao]
-        data = inter.data[:, cols]
-        order = np.lexsort(tuple(data[:, c]
-                                 for c in range(data.shape[1] - 1, -1, -1)))
-        return data[order]
+        cols = [inter.vars.index(v) for v in self.output_vars]
+        data = inter.data[:, cols].astype(np.int64)
+        if data.shape[0] > 1:
+            data = data[np.lexsort(data.T[::-1])]
+        return data if limit is None else data[:limit]
+
+    @property
+    def output_vars(self) -> tuple[str, ...]:
+        """Column order of :meth:`enumerate`: the plan's GAO when it
+        covers every variable, else the legacy heuristic order."""
+        plan = self.join_plan
+        if plan is not None and set(plan.gao) == set(self.query.variables):
+            return plan.gao
+        from .gao import choose_gao
+        return choose_gao(self.query)
 
 
 def binary_join_count(query: Query, db: Database,

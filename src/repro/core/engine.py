@@ -18,8 +18,17 @@ planned into a frozen :class:`~repro.core.plan.JoinPlan`, and
 
 Pass ``plan=`` to skip planning (e.g. a :class:`planner.PlanCache` hit),
 or ``cache=`` to memoize plans across calls.
+
+Beyond counting, :func:`enumerate` materializes the output tuples (flat
+:class:`~repro.results.ResultSet` or trie-compressed
+:class:`~repro.results.FactorizedResult`) and :func:`stream` returns a
+bounded-memory page cursor — both resolve their plan through the same
+planner path (``output='rows'``), so cached enumeration plans carry a
+costed ``output_mode``.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from .binary_join import BinaryJoin
 from .device_graph import GraphDB
@@ -68,9 +77,11 @@ def execute(plan: JoinPlan, gdb: GraphDB, **kw) -> int:
     raise ValueError(f"unknown engine {engine!r}; options: {ENGINES}")
 
 
-def count(query: Query, gdb: GraphDB, engine: str = "auto",
-          plan: JoinPlan | None = None, cache: PlanCache | None = None,
-          gao: tuple[str, ...] | None = None, **kw) -> int:
+def _resolve_plan(query: Query, gdb: GraphDB, engine: str,
+                  plan: JoinPlan | None, cache: PlanCache | None,
+                  gao: tuple[str, ...] | None,
+                  output: str = "count") -> JoinPlan:
+    """Shared plan resolution for ``count``/``enumerate``/``stream``."""
     if plan is None:
         if engine not in ENGINES:
             raise ValueError(
@@ -78,18 +89,117 @@ def count(query: Query, gdb: GraphDB, engine: str = "auto",
         stats = GraphStats.of(gdb)
         if gao is not None:
             # a pinned GAO bypasses the cache (keys don't carry the GAO)
-            plan = plan_query(query, stats, engine=engine, gao=gao)
-        elif cache is not None:
-            plan = cache.get_or_plan(query, stats, engine)
-        else:
-            plan = plan_query(query, stats, engine=engine)
-    elif (plan.query.atoms, plan.query.filters) != (query.atoms,
-                                                    query.filters):
+            return plan_query(query, stats, engine=engine, gao=gao,
+                              output=output)
+        if cache is not None:
+            return cache.get_or_plan(query, stats, engine, output=output)
+        return plan_query(query, stats, engine=engine, output=output)
+    if (plan.query.atoms, plan.query.filters) != (query.atoms,
+                                                  query.filters):
         raise ValueError(
             f"plan was built for {plan.query.name!r}, not {query.name!r}")
-    elif engine != "auto" and plan.engine != engine:
+    if engine != "auto" and plan.engine != engine:
         raise ValueError(f"plan uses engine {plan.engine!r} but "
                          f"engine={engine!r} was requested")
-    elif gao is not None and tuple(gao) != plan.gao:
+    if gao is not None and tuple(gao) != plan.gao:
         raise ValueError("both plan= and a conflicting gao= given")
+    return plan
+
+
+def count(query: Query, gdb: GraphDB, engine: str = "auto",
+          plan: JoinPlan | None = None, cache: PlanCache | None = None,
+          gao: tuple[str, ...] | None = None, **kw) -> int:
+    plan = _resolve_plan(query, gdb, engine, plan, cache, gao)
     return execute(plan, gdb, **kw)
+
+
+def _engine_rows(plan: JoinPlan, gdb: GraphDB, limit: int | None = None,
+                 **kw) -> tuple[np.ndarray, tuple[str, ...]]:
+    """Run a plan's engine enumeration: ``(rows, columns)``.
+
+    Every engine's ``enumerate(limit=)`` follows one contract (int64,
+    columns = its ``output_vars``, lex row order, limit truncates after
+    ordering), so the limit pushes down uniformly."""
+    engine = plan.engine
+    query = plan.query
+    if engine == "vlftj":
+        eng = VLFTJ(query, gdb, plan=plan, **kw)
+    elif engine == "yannakakis":
+        eng = CountingYannakakis(query, gdb, plan=plan)
+    elif engine == "hybrid":
+        eng = HybridJoin(query, gdb, plan=plan, **kw)
+    elif engine == "lftj_ref":
+        eng = LFTJ(query, gdb.to_database(), plan=plan)
+    elif engine == "minesweeper_ref":
+        eng = Minesweeper(query, gdb.to_database(), plan=plan, **kw)
+    elif engine == "binary":
+        eng = BinaryJoin(query, gdb.to_database(), plan=plan, **kw)
+    else:
+        raise ValueError(f"unknown engine {engine!r}; options: {ENGINES}")
+    return eng.enumerate(limit=limit), eng.output_vars
+
+
+def enumerate(query: Query, gdb: GraphDB, engine: str = "auto",
+              limit: int | None = None,
+              order: tuple[str, ...] | None = None,
+              plan: JoinPlan | None = None, cache: PlanCache | None = None,
+              gao: tuple[str, ...] | None = None,
+              mode: str | None = None, **kw):
+    """Enumerate output tuples through the same planner path as ``count``.
+
+    Returns a :class:`repro.results.ResultSet` (flat, the default) or a
+    :class:`repro.results.FactorizedResult` (``mode='factorized'``, or
+    when the resolved plan's costed ``output_mode`` says so).  Columns
+    follow ``order`` (default: ``query.variables`` — engine-independent,
+    so any two engines agree row-for-row); rows are int64 and
+    lexicographically sorted; ``limit`` truncates after the ordering.
+    """
+    from ..results import FactorizedResult, ResultSet
+    plan = _resolve_plan(query, gdb, engine, plan, cache, gao,
+                         output="rows")
+    target = tuple(order) if order is not None else query.variables
+    if set(target) != set(query.variables):
+        raise ValueError(f"order {target} does not cover the query "
+                         f"variables {query.variables}")
+    mode = mode or (plan.output_mode if plan.output_mode != "count"
+                    else "flat")
+    if mode not in ("flat", "factorized"):
+        raise ValueError(f"unknown mode {mode!r}; "
+                         "options: ('flat', 'factorized')")
+    if (mode == "factorized" and plan.engine == "vlftj"
+            and target == plan.gao and limit is None):
+        # native path: trie-compress the penultimate frontier and keep
+        # the final level's extensions as leaf segments — the full flat
+        # cross-product is never materialized
+        from ..results.factorize import factorize_vlftj
+        return factorize_vlftj(VLFTJ(query, gdb, plan=plan, **kw))
+    push = limit if target == plan.gao else None
+    rows, cols = _engine_rows(plan, gdb, limit=push, **kw)
+    if cols != target:
+        rows = rows[:, [cols.index(v) for v in target]]
+        if rows.shape[0] > 1:
+            rows = rows[np.lexsort(rows.T[::-1])]
+    if limit is not None:
+        rows = rows[:limit]
+    if mode == "factorized":
+        return FactorizedResult.from_rows(target, rows, sort=False)
+    return ResultSet(target, rows)
+
+
+def stream(query: Query, gdb: GraphDB, engine: str = "auto",
+           page_rows: int = 1024, plan: JoinPlan | None = None,
+           cache: PlanCache | None = None, **kw):
+    """A :class:`repro.results.ResultCursor` over the query's output.
+
+    Vectorized-LFTJ plans stream with bounded memory (the final level is
+    re-entered per frontier chunk); other engines materialize once and
+    page the rows.  Columns are the cursor's ``vars`` (the executing
+    engine's output order)."""
+    from ..results import ResultCursor
+    plan = _resolve_plan(query, gdb, engine, plan, cache, None,
+                         output="rows")
+    if plan.engine == "vlftj":
+        return ResultCursor(VLFTJ(query, gdb, plan=plan, **kw),
+                            page_rows=page_rows)
+    rows, cols = _engine_rows(plan, gdb, **kw)
+    return ResultCursor.from_rows(cols, rows, page_rows=page_rows)

@@ -147,7 +147,18 @@ class LFTJ:
         return self.run()
 
     def enumerate(self, limit: int | None = None) -> np.ndarray:
-        """Materialize output tuples in GAO variable order."""
+        """Output tuples: int64, columns in GAO order
+        (``self.output_vars``), rows in lexicographic order.
+
+        ``limit`` truncates *after* the deterministic ordering — the
+        shared engine contract (``repro.results``).  The leapfrog visits
+        each level's values ascending, so emission order *is* the
+        lexicographic order and early termination at ``limit`` rows
+        coincides with post-sort truncation (tested in
+        ``tests/test_enumerate.py``); it also matches
+        ``ResultCursor.take(limit)`` over the vectorized engine."""
+        if limit is not None and limit <= 0:
+            return np.zeros((0, len(self.gao)), dtype=np.int64)
         out: list[tuple[int, ...]] = []
 
         def emit(t):
@@ -161,6 +172,11 @@ class LFTJ:
             pass
         arr = np.array(out, dtype=np.int64)
         return arr.reshape(-1, len(self.gao))
+
+    @property
+    def output_vars(self) -> tuple[str, ...]:
+        """Column order of :meth:`enumerate` (the GAO)."""
+        return self.gao
 
 
 class _Done(Exception):

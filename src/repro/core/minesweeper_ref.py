@@ -465,10 +465,33 @@ class Minesweeper:
     def count(self) -> int:
         return self.run()
 
-    def enumerate(self) -> np.ndarray:
+    def enumerate(self, limit: int | None = None) -> np.ndarray:
+        """Output tuples: int64, columns in GAO order
+        (``self.output_vars``), rows in lexicographic order; ``limit``
+        truncates after the ordering (the shared engine contract — the
+        moving frontier advances lexicographically, so emission order is
+        already the sorted order)."""
+        from .lftj_ref import _Done
+
+        if limit is not None and limit <= 0:
+            return np.zeros((0, self.n), dtype=np.int64)
         out: list[tuple[int, ...]] = []
-        self.run(out.append)
+
+        def emit(t):
+            out.append(t)
+            if limit is not None and len(out) >= limit:
+                raise _Done
+
+        try:
+            self.run(emit)
+        except _Done:
+            pass
         return np.array(out, dtype=np.int64).reshape(-1, self.n)
+
+    @property
+    def output_vars(self) -> tuple[str, ...]:
+        """Column order of :meth:`enumerate` (the GAO)."""
+        return self.gao
 
 
 def minesweeper_count(query: Query, db: Database,

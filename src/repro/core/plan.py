@@ -211,6 +211,13 @@ class JoinPlan:
     annotations ``benchmarks/bench_planner.py`` correlates against actual
     runtimes.  ``stats_fingerprint`` records the GraphStats the plan was
     costed against.
+
+    ``output_mode`` is what the plan *emits*: ``'count'`` (the default —
+    Idea-8 tallies, nothing materialized), ``'flat'`` (int64 tuples) or
+    ``'factorized'`` (a trie-compressed
+    :class:`~repro.results.FactorizedResult`).  For enumeration plans the
+    planner costs flat-vs-factorized emission
+    (``planner.estimate_emission``) and records the cheaper mode here.
     """
 
     query: Query
@@ -223,6 +230,7 @@ class JoinPlan:
     level_costs: tuple[float, ...] = ()
     agm_log2: float | None = None
     stats_fingerprint: str = ""
+    output_mode: str = "count"
 
     def __post_init__(self):
         if self.engine in ("vlftj", "lftj_ref") and not self.levels \
@@ -248,5 +256,7 @@ class JoinPlan:
                          f"@{self.decomposition.attachment}")
         if self.root is not None:
             parts.append(f"root={self.root}")
+        if self.output_mode != "count":
+            parts.append(f"out={self.output_mode}")
         parts.append(f"cost~2^{math.log2(max(self.est_cost, 1.0)):.1f}")
         return " ".join(parts)

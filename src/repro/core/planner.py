@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import math
 from collections import OrderedDict
+from dataclasses import replace
 from itertools import permutations
 
 from .agm import fractional_edge_cover
@@ -45,6 +46,48 @@ AUTO_ENGINES = ("yannakakis", "hybrid", "vlftj")
 # cost model
 # ---------------------------------------------------------------------------
 
+def _cost_model(query: Query, gao: tuple[str, ...], stats: GraphStats,
+                seed_frontier: float | None = None,
+                ) -> tuple[float, tuple[float, ...], tuple[float, ...]]:
+    """Shared survivor model: ``(total_cost, level_costs, frontiers)``
+    where ``frontiers[i]`` estimates the frontier size *after* level i
+    (``frontiers[-1]`` is the estimated output cardinality)."""
+    levels = compile_levels(query, gao)
+    n = max(1, stats.n_nodes)
+    d = max(1.0, stats.avg_degree)
+    logd = math.log2(max(2, stats.max_degree))
+    # the executor's padding defaults (shared with VLFTJ.__init__)
+    width, chunk_rows = executor_geometry(stats.max_degree)
+    frontier = 1.0
+    costs: list[float] = []
+    frontiers: list[float] = []
+    for i, lp in enumerate(levels):
+        sel_unary = 1.0
+        for u in lp.unary:
+            sel_unary *= stats.unary_selectivity(u)
+        sel_ineq = 0.5 ** (len(lp.lower) + len(lp.upper))
+        if i == 0:
+            frontier = n * sel_unary if seed_frontier is None \
+                else seed_frontier
+            costs.append(float(n))          # bitmap-filtered domain scan
+            frontiers.append(frontier)
+            continue
+        if lp.edge_sources:
+            extra_checks = max(0, len(lp.edge_sources) - 1)
+            padded = math.ceil(frontier / chunk_rows) * chunk_rows * width
+            work = padded * (1.0 + extra_checks * logd)
+            survive = d * ((d / n) ** extra_checks) * sel_unary * sel_ineq
+        else:
+            # no bound edge neighbor: host cross product with the domain
+            cand = n * sel_unary
+            work = frontier * cand
+            survive = cand * sel_ineq
+        costs.append(max(work, 1.0))
+        frontier = max(frontier * survive, 1e-6)
+        frontiers.append(frontier)
+    return sum(costs), tuple(costs), tuple(frontiers)
+
+
 def estimate_vlftj_cost(query: Query, gao: tuple[str, ...],
                         stats: GraphStats,
                         seed_frontier: float | None = None,
@@ -59,37 +102,24 @@ def estimate_vlftj_cost(query: Query, gao: tuple[str, ...],
     independence model: ``d/n`` per membership check, ``|u|/n`` per
     unary predicate, ``1/2`` per inequality filter.
     """
-    levels = compile_levels(query, gao)
-    n = max(1, stats.n_nodes)
-    d = max(1.0, stats.avg_degree)
-    logd = math.log2(max(2, stats.max_degree))
-    # the executor's padding defaults (shared with VLFTJ.__init__)
-    width, chunk_rows = executor_geometry(stats.max_degree)
-    frontier = 1.0
-    costs: list[float] = []
-    for i, lp in enumerate(levels):
-        sel_unary = 1.0
-        for u in lp.unary:
-            sel_unary *= stats.unary_selectivity(u)
-        sel_ineq = 0.5 ** (len(lp.lower) + len(lp.upper))
-        if i == 0:
-            frontier = n * sel_unary if seed_frontier is None \
-                else seed_frontier
-            costs.append(float(n))          # bitmap-filtered domain scan
-            continue
-        if lp.edge_sources:
-            extra_checks = max(0, len(lp.edge_sources) - 1)
-            padded = math.ceil(frontier / chunk_rows) * chunk_rows * width
-            work = padded * (1.0 + extra_checks * logd)
-            survive = d * ((d / n) ** extra_checks) * sel_unary * sel_ineq
-        else:
-            # no bound edge neighbor: host cross product with the domain
-            cand = n * sel_unary
-            work = frontier * cand
-            survive = cand * sel_ineq
-        costs.append(max(work, 1.0))
-        frontier = max(frontier * survive, 1e-6)
-    return sum(costs), tuple(costs)
+    total, costs, _ = _cost_model(query, gao, stats, seed_frontier)
+    return total, costs
+
+
+def estimate_emission(query: Query, gao: tuple[str, ...],
+                      stats: GraphStats) -> tuple[float, float]:
+    """Estimated materialization cells for ``(flat, factorized)`` output.
+
+    Flat emission stores ``est_out × k`` int64 cells; the trie-factorized
+    form stores two cells (value, parent) per trie node, and the per-level
+    node counts are exactly the frontier estimates the survivor model
+    already tracks.  The planner records the cheaper mode in
+    ``JoinPlan.output_mode`` for enumeration plans."""
+    _, _, frontiers = _cost_model(query, gao, stats)
+    out = frontiers[-1]
+    flat = out * len(gao)
+    fact = 2.0 * sum(frontiers)
+    return flat, fact
 
 
 def estimate_yannakakis_cost(query: Query, stats: GraphStats) -> float:
@@ -340,15 +370,45 @@ def candidate_plans(query: Query, stats: GraphStats) -> list[JoinPlan]:
     return out
 
 
+def _with_output_mode(plan: JoinPlan, stats: GraphStats,
+                      output: str) -> JoinPlan:
+    """Stamp the emission mode onto an enumeration plan.
+
+    ``output='rows'`` costs flat-vs-factorized emission when the plan's
+    GAO covers every variable (the trie form needs a total column
+    order); the message-passing engines always emit flat."""
+    if output == "count":
+        return plan
+    mode = "flat"
+    if plan.engine not in ("yannakakis", "hybrid") \
+            and set(plan.gao) == set(plan.query.variables):
+        try:
+            flat, fact = estimate_emission(plan.query, plan.gao, stats)
+            if fact < flat:
+                mode = "factorized"
+        except ValueError:
+            pass  # non-graph atoms: the model cannot price emission
+    return replace(plan, output_mode=mode)
+
+
 def plan_query(query: Query, stats: GraphStats, engine: str = "auto",
-               gao: tuple[str, ...] | None = None) -> JoinPlan:
+               gao: tuple[str, ...] | None = None,
+               output: str = "count") -> JoinPlan:
     """Build the physical plan for ``query`` against ``stats``.
 
     ``engine="auto"`` picks the cheapest of the candidate plans;
     an explicit engine name forces that physical operator (the reference
     engines — ``lftj_ref``, ``minesweeper_ref``, ``binary`` — are only
-    reachable this way).
+    reachable this way).  ``output='rows'`` builds an enumeration plan:
+    the result carries ``output_mode`` ('flat' or 'factorized', costed
+    by :func:`estimate_emission`) instead of the default 'count'.
     """
+    if output not in ("count", "rows"):
+        raise ValueError(f"unknown output {output!r}; "
+                         "options: ('count', 'rows')")
+    if output == "rows":
+        plan = plan_query(query, stats, engine=engine, gao=gao)
+        return _with_output_mode(plan, stats, output)
     if engine in ("auto", "yannakakis") and gao is not None:
         # neither auto routing nor message passing honors a pinned
         # attribute order — reject rather than silently ignore it
@@ -397,8 +457,10 @@ def plan_query(query: Query, stats: GraphStats, engine: str = "auto",
 
 class PlanCache:
     """LRU cache of :class:`JoinPlan`, keyed by query *structure*
-    (atoms + filters, display name ignored), requested engine, and the
-    graph-stats fingerprint — so a stats change invalidates entries."""
+    (atoms + filters, display name ignored), requested engine, the
+    requested output ('count' vs 'rows' — enumeration plans carry an
+    emission mode), and the graph-stats fingerprint — so a stats change
+    invalidates entries."""
 
     def __init__(self, maxsize: int = 256):
         self.maxsize = maxsize
@@ -407,12 +469,14 @@ class PlanCache:
         self.misses = 0
 
     @staticmethod
-    def key(query: Query, stats: GraphStats, engine: str = "auto") -> tuple:
-        return (query.atoms, query.filters, engine, stats.fingerprint())
+    def key(query: Query, stats: GraphStats, engine: str = "auto",
+            output: str = "count") -> tuple:
+        return (query.atoms, query.filters, engine, output,
+                stats.fingerprint())
 
     def get(self, query: Query, stats: GraphStats,
-            engine: str = "auto") -> JoinPlan | None:
-        k = self.key(query, stats, engine)
+            engine: str = "auto", output: str = "count") -> JoinPlan | None:
+        k = self.key(query, stats, engine, output)
         plan = self._entries.get(k)
         if plan is not None:
             self.hits += 1
@@ -420,12 +484,13 @@ class PlanCache:
         return plan
 
     def get_or_plan(self, query: Query, stats: GraphStats,
-                    engine: str = "auto") -> JoinPlan:
-        plan = self.get(query, stats, engine)
+                    engine: str = "auto",
+                    output: str = "count") -> JoinPlan:
+        plan = self.get(query, stats, engine, output)
         if plan is None:
             self.misses += 1
-            plan = plan_query(query, stats, engine=engine)
-            self._entries[self.key(query, stats, engine)] = plan
+            plan = plan_query(query, stats, engine=engine, output=output)
+            self._entries[self.key(query, stats, engine, output)] = plan
             while len(self._entries) > self.maxsize:
                 self._entries.popitem(last=False)
         return plan

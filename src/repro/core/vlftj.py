@@ -251,10 +251,14 @@ class VLFTJ:
 
     # -- main loop -----------------------------------------------------------
     def _run(self, count_only: bool = True, frontier: np.ndarray | None = None,
-             mult: np.ndarray | None = None):
+             mult: np.ndarray | None = None, max_levels: int | None = None):
+        """Advance the frontier through GAO levels ``< max_levels``
+        (default: all).  ``repro.results.ResultCursor`` passes
+        ``max_levels=len(plan)-1`` to materialize only the penultimate
+        frontier and re-enter the final level itself, page by page."""
         gdb = self.gdb
         indptr, indices = gdb.dev("indptr"), gdb.dev("indices")
-        n_levels = len(self.plan)
+        n_levels = len(self.plan) if max_levels is None else max_levels
         if frontier is None:
             frontier = self._domain_values(self.plan[0])[:, None]
         frontier = np.asarray(frontier, dtype=np.int32)
@@ -330,14 +334,87 @@ class VLFTJ:
             return int(mult.sum())
         return frontier
 
+    # -- enumeration support -------------------------------------------------
+    def last_level_extensions(self, frontier: np.ndarray,
+                              row_valid: np.ndarray | None = None
+                              ) -> tuple[np.ndarray, np.ndarray]:
+        """Surviving final-level extensions for one penultimate-frontier
+        chunk: ``(counts (C,), values (counts.sum(),))`` with each row's
+        values ascending (CSR adjacencies are sorted).  Membership checks
+        use the binary-search path — the degree-bucketing of
+        ``check_mode='auto'`` reorders rows, which would break the
+        row-aligned counts the cursor pages by."""
+        lp = self.plan[-1]
+        frontier = np.asarray(frontier, dtype=np.int32)
+        C = frontier.shape[0]
+        if row_valid is None:
+            row_valid = np.ones(C, dtype=bool)
+        if C == 0:
+            return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.int64))
+        if not lp.edge_sources:
+            # dense level: per-row cross product with the sorted domain
+            values = np.sort(self._domain_values(lp))
+            counts = np.zeros(C, dtype=np.int64)
+            out: list[np.ndarray] = []
+            for r in range(C):
+                if not row_valid[r]:
+                    continue
+                vals = values
+                for col in lp.lower:
+                    vals = vals[vals > frontier[r, col]]
+                for col in lp.upper:
+                    vals = vals[vals < frontier[r, col]]
+                counts[r] = vals.shape[0]
+                out.append(vals)
+            flat = (np.concatenate(out) if out
+                    else np.zeros(0, dtype=np.int64))
+            return counts, flat.astype(np.int64)
+        bitmaps = tuple(self.gdb.dev(f"bitmap:{u}") for u in lp.unary)
+        mode = self.check_mode if self.check_mode in ("tile", "bsearch2") \
+            else "bsearch"
+        kw = dict(probe_cols=lp.edge_sources, n_unary=len(bitmaps),
+                  lower_cols=lp.lower, upper_cols=lp.upper,
+                  width=self.width, n_iter=self.n_iter,
+                  needs_degree=lp.needs_degree, count_only=False,
+                  check_mode=mode,
+                  check_width=self.tile_width if mode == "tile" else 0,
+                  rotate_checks=self.rotate_checks)
+        if mode == "bsearch2":
+            kw.update(n_iter=self.n_iter1, n_iter2=self.n_iter2,
+                      summary=self.gdb.dev(f"summary:{self.summary_stride}"),
+                      summary_stride=self.summary_stride)
+        cand, keep = (np.asarray(x) for x in _expand_level(
+            self.gdb.dev("indptr"), self.gdb.dev("indices"), bitmaps,
+            jnp.asarray(frontier), jnp.ones(C, dtype=jnp.int64),
+            jnp.asarray(row_valid), **kw))
+        counts = keep.sum(axis=1).astype(np.int64)
+        return counts, cand[keep].astype(np.int64)
+
     # -- public API ----------------------------------------------------------
     def count(self) -> int:
         return int(self._run(count_only=True))
 
-    def enumerate(self) -> np.ndarray:
-        """All output tuples, columns in GAO order."""
-        out = self._run(count_only=False)
-        return np.asarray(out, dtype=np.int64)
+    def enumerate(self, limit: int | None = None,
+                  seeds: np.ndarray | None = None) -> np.ndarray:
+        """All output tuples: int64, columns in GAO order
+        (``self.output_vars``), rows lexicographically sorted; ``limit``
+        truncates *after* the ordering (the shared engine contract —
+        ``repro.results``).  ``seeds`` pre-binds the first GAO variable
+        (the enumeration analogue of :meth:`seeded_count`)."""
+        frontier = None if seeds is None \
+            else np.asarray(seeds, dtype=np.int32)[:, None]
+        out = self._run(count_only=False, frontier=frontier)
+        rows = np.asarray(out, dtype=np.int64)
+        k = len(self.plan)
+        if rows.shape[0] == 0:
+            return np.zeros((0, k), dtype=np.int64)
+        rows = rows[np.lexsort(rows.T[::-1])]
+        return rows if limit is None else rows[:limit]
+
+    @property
+    def output_vars(self) -> tuple[str, ...]:
+        """Column order of :meth:`enumerate` (the plan's GAO)."""
+        return self.gao
 
     def seeded_count(self, seed_values: np.ndarray,
                      seed_mult: np.ndarray) -> int:

@@ -106,6 +106,14 @@ class CountingYannakakis:
         if root is None and plan is not None and plan.root is not None:
             root = plan.root
         self.root = root or query.variables[0]
+        # enumeration column order: the plan's GAO covers every variable
+        # (yannakakis plans carry choose_gao(query)); plan-free
+        # construction derives the same order directly
+        if plan is not None and set(plan.gao) == set(query.variables):
+            self.gao = plan.gao
+        else:
+            from .gao import choose_gao
+            self.gao = choose_gao(query)
         self.stats = {"spmvs": 0}
 
     def _unary_mask(self, var: str) -> jnp.ndarray:
@@ -210,6 +218,20 @@ class CountingYannakakis:
             up(r, None)
             down(r, None, None)
         return {v: np.asarray(m) for v, m in active.items()}
+
+    def enumerate(self, limit: int | None = None) -> np.ndarray:
+        """Backward-expansion enumeration: int64 tuples, columns in GAO
+        order (``self.output_vars``), rows lex-sorted; ``limit``
+        truncates after the ordering.  See
+        ``repro.results.backward.yannakakis_rows``."""
+        from ..results.backward import yannakakis_rows
+        rows, _ = yannakakis_rows(self)
+        return rows if limit is None else rows[:limit]
+
+    @property
+    def output_vars(self) -> tuple[str, ...]:
+        """Column order of :meth:`enumerate`."""
+        return self.gao
 
 
 def yannakakis_count(query: Query, gdb: GraphDB) -> int:

@@ -21,6 +21,7 @@ Two granularities of parallelism, matching the paper's evaluation setup:
 from __future__ import annotations
 
 import time
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -152,6 +153,86 @@ class PartitionedJoin:
             "total_time": float(part_time.sum()),
         })
         return int(total)
+
+    def pages(self, page_rows: int = 1024) -> Iterator[np.ndarray]:
+        """Stream the join's output as fixed-size pages in global
+        GAO-lexicographic order.
+
+        Each part gets its own bounded-memory
+        :class:`~repro.results.ResultCursor` (the shared executor seeded
+        with the part's first-level values).  The parts partition the
+        first GAO variable's *domain*, so streams interleave only at
+        first-column granularity: the part holding the globally smallest
+        head row owns every row up to the next part's head value, and
+        whole runs splice over with one ``searchsorted`` — the merge a
+        scatter-gather coordinator would run over real workers' page
+        responses, with no per-row Python work."""
+        from ..results.cursor import ResultCursor
+
+        k = len(self.executor.gao)
+        streams: list[list] = []      # [head buffer, cursor] per live part
+        for p in self.parts:
+            if p.shape[0] == 0:
+                continue
+            cur = ResultCursor(self.executor, page_rows=page_rows,
+                               seeds=p.astype(np.int32))
+            page = cur.next_page()
+            if page is not None:
+                streams.append([page, cur])
+        out: list[np.ndarray] = []
+        buffered = 0
+        while streams:
+            i = min(range(len(streams)),
+                    key=lambda j: tuple(streams[j][0][0]))
+            buf, cur = streams[i]
+            others = [streams[j][0][0, 0]
+                      for j in range(len(streams)) if j != i]
+            if others:
+                # first-column values are disjoint across parts, so the
+                # run boundary is where the next part's head value starts
+                cut = int(np.searchsorted(buf[:, 0], min(others),
+                                          side="left"))
+            else:
+                cut = buf.shape[0]
+            take, rest = buf[:cut], buf[cut:]
+            if rest.shape[0]:
+                streams[i][0] = rest
+            else:
+                nxt = cur.next_page()
+                if nxt is None:
+                    streams.pop(i)
+                else:
+                    streams[i][0] = nxt
+            out.append(take)
+            buffered += take.shape[0]
+            while buffered >= page_rows:
+                cat = np.concatenate(out) if len(out) > 1 else out[0]
+                yield cat[:page_rows]
+                cat = cat[page_rows:]
+                out = [cat] if cat.shape[0] else []
+                buffered = int(cat.shape[0])
+        if buffered:
+            yield (np.concatenate(out)
+                   if len(out) > 1 else out[0]).reshape(-1, k)
+
+    def enumerate(self, limit: int | None = None, page_rows: int = 1024):
+        """All output tuples as a :class:`~repro.results.ResultSet` —
+        columns in the plan's GAO order, rows lex-sorted (``limit``
+        truncates after the ordering), produced by merging the
+        per-part page streams of :meth:`pages`."""
+        from ..results.result_set import ResultSet
+
+        out: list[np.ndarray] = []
+        taken = 0
+        for page in self.pages(page_rows=page_rows):
+            out.append(page)
+            taken += page.shape[0]
+            if limit is not None and taken >= limit:
+                break
+        rows = (np.concatenate(out, axis=0) if out
+                else np.zeros((0, len(self.executor.gao)), dtype=np.int64))
+        return ResultSet(self.executor.gao,
+                         rows if limit is None else rows[:limit])
 
 
 def partitioned_count(query: Query, gdb: GraphDB, n_workers: int = 4,

@@ -134,6 +134,31 @@ def block_tile_starts(dst_sorted: np.ndarray, n_nodes: int,
     return t0, n_tiles
 
 
+def segment_expand(prefix: np.ndarray, counts: np.ndarray,
+                   values: np.ndarray) -> np.ndarray:
+    """Host-side segmented expansion — the enumeration dual of the
+    segment-outer scatter above.  Where the kernel folds per-edge products
+    *into* nodes, this unfolds per-row extension segments *out of* rows:
+
+        out = [prefix[i] ++ v  for i, seg in enumerate(segments)
+                               for v in seg]
+
+    ``prefix`` (C, k) rows are repeated by ``counts`` (C,) and the
+    flattened segment ``values`` (counts.sum(),) become the new last
+    column.  Rows stay in segment order, so a lex-sorted prefix with
+    ascending per-row segments yields lex-sorted output — the invariant
+    ``repro.results.ResultCursor`` streams pages under.  Returns int64.
+    """
+    prefix = np.asarray(prefix)
+    counts = np.asarray(counts, dtype=np.int64)
+    values = np.asarray(values)
+    reps = np.repeat(np.arange(counts.shape[0]), counts)
+    out = np.empty((values.shape[0], prefix.shape[1] + 1), dtype=np.int64)
+    out[:, :-1] = prefix[reps]
+    out[:, -1] = values
+    return out
+
+
 def segment_outer_ref(msg, basis, dst, n_nodes: int):
     """Oracle: segment-sum of explicit outer products."""
     prod = msg[:, :, None] * basis[:, None, :]

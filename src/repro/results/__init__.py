@@ -1,0 +1,17 @@
+"""Plan-aware result enumeration: flat/factorized result sets, streaming
+cursors, and backward expansion for the counting engines.
+
+Entry points: ``repro.core.engine.enumerate`` (unified, all six engines)
+and ``repro.core.engine.stream`` (page cursor); the query server's
+``QueryRequest.limit/cursor`` pagination and the dist layer's
+``PartitionedJoin.enumerate`` build on the same pieces.
+"""
+from .backward import hybrid_rows, yannakakis_rows
+from .cursor import ResultCursor
+from .factorize import factorize_vlftj
+from .result_set import FactorizedResult, FLevel, ResultSet, lex_sorted
+
+__all__ = [
+    "FactorizedResult", "FLevel", "ResultSet", "ResultCursor",
+    "factorize_vlftj", "hybrid_rows", "yannakakis_rows", "lex_sorted",
+]

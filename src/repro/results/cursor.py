@@ -1,0 +1,181 @@
+"""Chunked, bounded-memory streaming of join output in fixed-size pages.
+
+Flat enumeration of a worst-case-optimal join materializes the full
+cross-product of the final GAO level — the one thing the counting path
+(Idea 8) carefully avoids.  :class:`ResultCursor` keeps that property
+for enumeration: it materializes only the *penultimate* frontier, sorts
+it lexicographically once, then re-enters the final VLFTJ level
+(``VLFTJ.last_level_extensions``) one small frontier chunk at a time,
+flattening each chunk with :func:`repro.kernels.segment_outer
+.segment_expand` and handing out pages of ``page_rows`` rows.
+
+Memory bound: the expansion chunk is sized ``cf = max(1,
+page_rows // width)`` frontier rows, so one chunk contributes at most
+``cf * width <= max(width, page_rows)`` buffered rows and pulling stops
+as soon as a page is covered.  The tail buffer therefore never exceeds
+``page_rows + max(width, page_rows)`` rows (``width`` = the executor's
+padded candidate-tile width, a data constant) — tracked in
+``stats['peak_buffer_rows']`` and asserted in the tests.  A *dense*
+final level (no bound edge neighbor — rare; GAO choice avoids it) has
+domain-sized fanout instead, so it streams one frontier row at a time
+with its extension run sliced to the page size, keeping the same bound.  Concatenating
+every page reproduces ``VLFTJ.enumerate`` exactly: the frontier is
+lex-sorted, per-row extensions ascend, so pages arrive in global
+lexicographic order.
+
+``from_rows`` / ``from_blocks`` wrap already-materialized output (the
+non-VLFTJ engines, the dist layer's merged part streams) in the same
+page interface so the query server paginates every engine uniformly.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator
+
+import numpy as np
+
+from ..core.vlftj import VLFTJ
+from ..kernels.segment_outer import segment_expand
+
+
+class ResultCursor:
+    """Page iterator over join output in the source's column order.
+
+    ``take(n)`` returns the next ``n`` rows (fewer at the end, an empty
+    ``(0, k)`` array once drained); ``next_page()`` returns
+    ``take(page_rows)`` or ``None`` when exhausted; iteration yields
+    pages.  ``vars`` names the columns; rows are int64 and arrive in
+    lexicographic order.
+    """
+
+    def __init__(self, executor: VLFTJ, page_rows: int = 1024,
+                 seeds: np.ndarray | None = None):
+        if page_rows < 1:
+            raise ValueError("page_rows must be >= 1")
+        self.vars = executor.gao
+        self.page_rows = page_rows
+        self.stats = {"pages": 0, "rows": 0, "chunks": 0,
+                      "peak_buffer_rows": 0, "frontier_rows": 0}
+        self._k = len(executor.gao)
+        self._buf: list[np.ndarray] = []
+        self._buffered = 0
+        self._drained = False
+        self.exhausted = False
+        self._blocks: Iterator[np.ndarray] = \
+            self._vlftj_blocks(executor, seeds)
+
+    # -- alternate sources ---------------------------------------------------
+    @classmethod
+    def from_blocks(cls, columns: tuple[str, ...],
+                    blocks: Iterable[np.ndarray],
+                    page_rows: int = 1024) -> "ResultCursor":
+        """Cursor over an iterable of row blocks already in lex order."""
+        cur = cls.__new__(cls)
+        cur.vars = tuple(columns)
+        cur.page_rows = page_rows
+        cur.stats = {"pages": 0, "rows": 0, "chunks": 0,
+                     "peak_buffer_rows": 0, "frontier_rows": 0}
+        cur._k = len(cur.vars)
+        cur._buf = []
+        cur._buffered = 0
+        cur._drained = False
+        cur.exhausted = False
+        cur._blocks = iter(blocks)
+        return cur
+
+    @classmethod
+    def from_rows(cls, columns: tuple[str, ...], rows: np.ndarray,
+                  page_rows: int = 1024) -> "ResultCursor":
+        """Cursor over one materialized (lex-sorted) row array."""
+        rows = np.asarray(rows, dtype=np.int64).reshape(-1, len(columns))
+        return cls.from_blocks(columns, [rows] if rows.shape[0] else [],
+                               page_rows)
+
+    # -- the VLFTJ streaming source ------------------------------------------
+    def _vlftj_blocks(self, ex: VLFTJ,
+                      seeds: np.ndarray | None) -> Iterator[np.ndarray]:
+        k = len(ex.plan)
+        if k == 1:
+            vals = (np.asarray(seeds) if seeds is not None
+                    else ex._domain_values(ex.plan[0]))
+            vals = np.sort(vals.astype(np.int64))
+            self.stats["frontier_rows"] = int(vals.shape[0])
+            for s in range(0, vals.shape[0], self.page_rows):
+                yield vals[s:s + self.page_rows, None]
+            return
+        seed_frontier = None if seeds is None \
+            else np.asarray(seeds, dtype=np.int32)[:, None]
+        frontier = np.asarray(
+            ex._run(count_only=False, frontier=seed_frontier,
+                    max_levels=k - 1), dtype=np.int64)
+        if frontier.shape[0] == 0:
+            return
+        frontier = frontier[np.lexsort(frontier.T[::-1])]
+        self.stats["frontier_rows"] = int(frontier.shape[0])
+        if not ex.plan[-1].edge_sources:
+            # dense final level (no bound edge neighbor): the fanout is
+            # the unary-filtered *domain*, not the adjacency width, so
+            # chunking by rows cannot bound the buffer — stream one row
+            # at a time and slice its extension run to the page size
+            for i in range(frontier.shape[0]):
+                counts, vals = ex.last_level_extensions(
+                    frontier[i:i + 1].astype(np.int32))
+                self.stats["chunks"] += 1
+                for s in range(0, vals.shape[0], self.page_rows):
+                    part = vals[s:s + self.page_rows]
+                    yield segment_expand(
+                        frontier[i:i + 1],
+                        np.array([part.shape[0]], dtype=np.int64), part)
+            return
+        # chunk so one expansion never exceeds ~page_rows buffered rows
+        cf = min(max(1, self.page_rows // max(1, ex.width)), ex.chunk_rows)
+        for s in range(0, frontier.shape[0], cf):
+            chunk = frontier[s:s + cf]
+            real = chunk.shape[0]
+            if real < cf:
+                chunk = np.pad(chunk, ((0, cf - real), (0, 0)))
+            valid = np.zeros(cf, dtype=bool)
+            valid[:real] = True
+            counts, vals = ex.last_level_extensions(
+                chunk.astype(np.int32), valid)
+            self.stats["chunks"] += 1
+            yield segment_expand(chunk[:real], counts[:real], vals)
+
+    # -- paging --------------------------------------------------------------
+    def take(self, n: int | None = None) -> np.ndarray:
+        """The next ``n`` rows (default ``page_rows``); empty when drained."""
+        n = self.page_rows if n is None else n
+        while self._buffered < n and not self._drained:
+            try:
+                block = next(self._blocks)
+            except StopIteration:
+                self._drained = True
+                break
+            if block.shape[0]:
+                self._buf.append(block)
+                self._buffered += int(block.shape[0])
+                self.stats["peak_buffer_rows"] = max(
+                    self.stats["peak_buffer_rows"], self._buffered)
+        if self._buf:
+            cat = (self._buf[0] if len(self._buf) == 1
+                   else np.concatenate(self._buf, axis=0))
+            out, rest = cat[:n], cat[n:]
+            self._buf = [rest] if rest.shape[0] else []
+            self._buffered = int(rest.shape[0])
+        else:
+            out = np.zeros((0, self._k), dtype=np.int64)
+        self.stats["pages"] += 1
+        self.stats["rows"] += int(out.shape[0])
+        self.exhausted = self._drained and self._buffered == 0
+        return out
+
+    def next_page(self) -> np.ndarray | None:
+        """``take(page_rows)``, or ``None`` once the stream is exhausted."""
+        page = self.take(self.page_rows)
+        return page if page.shape[0] else None
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        while True:
+            page = self.next_page()
+            if page is None:
+                return
+            yield page

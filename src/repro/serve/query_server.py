@@ -18,16 +18,30 @@ serves through the plan/execute split (``core.plan`` / ``core.planner``):
     their ``vlftj`` plans through
     :class:`repro.dist.sharded_join.PartitionedJoin` (granularity-factor
     work splitting; the result's engine label gains ``+partitioned`` and
-    ``last_dist_stats`` exposes the partition makespan).
+    ``last_dist_stats`` exposes the partition makespan);
+  * requests with ``limit=`` (or a continuation ``cursor=``) return
+    *rows*, not counts: the server opens a bounded-memory
+    :class:`~repro.results.ResultCursor` (``core.engine.stream`` — plans
+    resolve with ``output='rows'`` through the same plan cache, so
+    same-plan grouping is preserved), hands back one page plus an opaque
+    ``next_cursor`` token, and resumes the cursor on the next request
+    without re-planning or re-executing the prefix.  Dist-routed rows
+    requests stream ``PartitionedJoin.pages`` (per-part cursors merged
+    in GAO order).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import numpy as np
 
 from ..core import GraphDB, GraphStats, JoinPlan, PlanCache, execute, \
     get_query
+from ..core import engine as engine_mod
 from ..graphs import CSRGraph, node_sample
+from ..results import ResultCursor
 
 
 @dataclass
@@ -36,6 +50,14 @@ class QueryRequest:
     selectivity: float | None = None   # regenerate v1/v2 samples at 1/s
     seed: int = 0
     engine: str = "auto"
+    # enumeration: limit= asks for (up to) that many rows; cursor= resumes
+    # a previous response's next_cursor token (limit then sizes the page)
+    limit: int | None = None
+    cursor: str | None = None
+
+    @property
+    def wants_rows(self) -> bool:
+        return self.limit is not None or self.cursor is not None
 
 
 @dataclass
@@ -46,13 +68,20 @@ class QueryResult:
     latency_s: float
     plan: JoinPlan | None = None
     plan_cached: bool = False
+    # enumeration responses: one page of output tuples (count = page
+    # rows), its column order, and the continuation token (None when the
+    # result set is exhausted)
+    rows: np.ndarray | None = None
+    row_vars: tuple[str, ...] | None = None
+    next_cursor: str | None = field(default=None)
 
 
 class QueryServer:
     def __init__(self, csr: CSRGraph, default_selectivity: float = 10.0,
                  plan_cache_size: int = 256,
                  dist_edge_threshold: int | None = 1 << 22,
-                 dist_workers: int = 4, dist_granularity: int = 2):
+                 dist_workers: int = 4, dist_granularity: int = 2,
+                 page_rows: int = 1024, max_open_cursors: int = 64):
         self.csr = csr
         self.default_selectivity = default_selectivity
         self._warm: dict = {}
@@ -66,28 +95,45 @@ class QueryServer:
         self.dist_granularity = dist_granularity
         self.last_dist_stats: dict | None = None
         self._dist_joins: dict = {}
+        # open enumeration cursors: token -> (cursor, engine label, plan),
+        # LRU-capped at max_open_cursors so abandoned paginations (a
+        # client that never follows next_cursor) cannot accumulate
+        # frontier arrays for the life of the server — evicted tokens
+        # behave like exhausted ones (ValueError on resume)
+        self.page_rows = page_rows
+        self.max_open_cursors = max_open_cursors
+        self._cursors: "OrderedDict[str, tuple[ResultCursor, str, JoinPlan]]" \
+            = OrderedDict()
+        self._cursor_seq = 0
 
     def _routes_to_dist(self, plan: JoinPlan, gdb: GraphDB) -> bool:
         return (self.dist_edge_threshold is not None
                 and plan.engine == "vlftj"
                 and gdb.csr.n_edges >= self.dist_edge_threshold)
 
+    def _dist_join_for(self, plan: JoinPlan, gdb: GraphDB,
+                       req: QueryRequest):
+        """Memoized per (plan, graph): the seed-domain sort and the part
+        schedule amortize over same-plan request groups just like the
+        jitted level kernels do."""
+        from ..dist.sharded_join import PartitionedJoin
+        # count and rows plans for one query differ only in output_mode,
+        # which the partition layer never reads — share one instance
+        key = (plan.query.atoms, plan.query.filters, plan.gao, id(gdb))
+        pj = self._dist_joins.get(key)
+        if pj is None:
+            pj = PartitionedJoin(get_query(req.query_name), gdb,
+                                 n_workers=self.dist_workers,
+                                 granularity=self.dist_granularity,
+                                 plan=plan)
+            self._dist_joins[key] = pj
+        return pj
+
     def _execute_plan(self, plan: JoinPlan, gdb: GraphDB,
                       req: QueryRequest) -> tuple[int, str]:
         """(count, engine label); large graphs take the partitioned path."""
         if self._routes_to_dist(plan, gdb):
-            from ..dist.sharded_join import PartitionedJoin
-            # memoize per (plan, graph): the seed-domain sort and the
-            # part schedule amortize over same-plan request groups just
-            # like the jitted level kernels do
-            key = (plan, id(gdb))
-            pj = self._dist_joins.get(key)
-            if pj is None:
-                pj = PartitionedJoin(get_query(req.query_name), gdb,
-                                     n_workers=self.dist_workers,
-                                     granularity=self.dist_granularity,
-                                     plan=plan)
-                self._dist_joins[key] = pj
+            pj = self._dist_join_for(plan, gdb, req)
             c = pj.count()
             self.last_dist_stats = pj.stats
             return c, plan.engine + "+partitioned"
@@ -108,13 +154,14 @@ class QueryServer:
             self._stats[key] = GraphStats.of(gdb)
         return self._stats[key]
 
-    def _plan_for(self, req: QueryRequest, gdb: GraphDB
-                  ) -> tuple[JoinPlan, bool]:
+    def _plan_for(self, req: QueryRequest, gdb: GraphDB,
+                  output: str = "count") -> tuple[JoinPlan, bool]:
         """(plan, was_cache_hit) for one request."""
         q = get_query(req.query_name)
         stats = self._stats_for(gdb)
         hits_before = self.plan_cache.hits
-        plan = self.plan_cache.get_or_plan(q, stats, req.engine)
+        plan = self.plan_cache.get_or_plan(q, stats, req.engine,
+                                           output=output)
         return plan, self.plan_cache.hits > hits_before
 
     def plan_cache_info(self) -> dict:
@@ -122,10 +169,59 @@ class QueryServer:
                 "misses": self.plan_cache.misses,
                 "size": len(self.plan_cache)}
 
+    # -- enumeration / pagination -------------------------------------------
+    def _open_cursor(self, plan: JoinPlan, gdb: GraphDB,
+                     req: QueryRequest) -> tuple[ResultCursor, str]:
+        """(cursor, engine label); large graphs stream the merged
+        per-part pages of the partitioned join."""
+        q = get_query(req.query_name)
+        if self._routes_to_dist(plan, gdb):
+            pj = self._dist_join_for(plan, gdb, req)
+            cur = ResultCursor.from_blocks(
+                pj.executor.gao, pj.pages(page_rows=self.page_rows),
+                page_rows=self.page_rows)
+            return cur, plan.engine + "+partitioned"
+        return engine_mod.stream(q, gdb, plan=plan,
+                                 page_rows=self.page_rows), plan.engine
+
+    def _rows_result(self, req: QueryRequest, cur: ResultCursor,
+                     label: str, plan: JoinPlan | None, cached: bool,
+                     token: str | None, t0: float) -> QueryResult:
+        page = cur.take(req.limit if req.limit is not None
+                        else self.page_rows)
+        if cur.exhausted:
+            if token is not None:
+                self._cursors.pop(token, None)
+            token = None
+        elif token is None:
+            self._cursor_seq += 1
+            token = f"cur-{self._cursor_seq}"
+            self._cursors[token] = (cur, label, plan)
+            while len(self._cursors) > self.max_open_cursors:
+                self._cursors.popitem(last=False)
+        else:
+            self._cursors.move_to_end(token)
+        return QueryResult(req, int(page.shape[0]), label,
+                           time.time() - t0, plan=plan, plan_cached=cached,
+                           rows=page, row_vars=cur.vars, next_cursor=token)
+
     def execute(self, req: QueryRequest) -> QueryResult:
+        t0 = time.time()
+        if req.cursor is not None:
+            try:
+                cur, label, plan = self._cursors[req.cursor]
+            except KeyError:
+                raise ValueError(f"unknown or exhausted cursor "
+                                 f"{req.cursor!r}") from None
+            return self._rows_result(req, cur, label, plan, True,
+                                     req.cursor, t0)
         sel = req.selectivity or self.default_selectivity
         gdb = self._gdb_for(sel, req.seed)
-        t0 = time.time()
+        if req.wants_rows:
+            plan, cached = self._plan_for(req, gdb, output="rows")
+            cur, label = self._open_cursor(plan, gdb, req)
+            return self._rows_result(req, cur, label, plan, cached,
+                                     None, t0)
         plan, cached = self._plan_for(req, gdb)
         c, label = self._execute_plan(plan, gdb, req)
         return QueryResult(req, c, label, time.time() - t0,
@@ -149,23 +245,36 @@ class QueryServer:
         executions of the same plan reuse the jitted level kernels —
         their static shapes are a function of the plan alone — so one
         cold compile amortizes over the whole group, and the device
-        graph stays warm within a group.
+        graph stays warm within a group.  Enumeration requests
+        (``limit=``) plan with ``output='rows'`` and group the same way;
+        cursor continuations already hold their machinery and run
+        directly.
         """
         prepared = []   # (index, plan, cached, gdb, plan_s)
+        results: list[QueryResult | None] = [None] * len(reqs)
         for i, req in enumerate(reqs):
+            if req.cursor is not None:
+                results[i] = self.execute(req)
+                continue
             sel = req.selectivity or self.default_selectivity
             gdb = self._gdb_for(sel, req.seed)
             t0 = time.time()
-            plan, cached = self._plan_for(req, gdb)
+            plan, cached = self._plan_for(
+                req, gdb, output="rows" if req.wants_rows else "count")
             prepared.append((i, plan, cached, gdb, time.time() - t0))
         # same-plan requests become adjacent; ties keep graph groups warm
         groups: dict[tuple, list] = {}
         for item in prepared:
             groups.setdefault((item[1], id(item[3])), []).append(item)
-        results: list[QueryResult | None] = [None] * len(reqs)
         for (_plan, _gid), items in groups.items():
             for i, plan, cached, gdb, plan_s in items:
                 t0 = time.time()
+                if reqs[i].wants_rows:
+                    cur, label = self._open_cursor(plan, gdb, reqs[i])
+                    results[i] = self._rows_result(
+                        reqs[i], cur, label, plan, cached, None,
+                        t0 - plan_s)
+                    continue
                 c, label = self._execute_plan(plan, gdb, reqs[i])
                 # latency_s matches execute(): planning share + execution
                 results[i] = QueryResult(

@@ -1,0 +1,382 @@
+"""Cross-engine enumeration parity and the repro.results subsystem.
+
+The contract (``repro.results``): every engine's ``enumerate`` emits
+int64 tuples, columns in its ``output_vars`` order, rows sorted
+lexicographically, and ``limit`` truncates *after* that ordering.  The
+unified ``core.engine.enumerate`` normalizes all six engines to the same
+column order (default: ``query.variables``), so results must agree
+row-for-row with the scalar LFTJ oracle; cursor pages must concatenate
+to the full result under a bounded tail buffer; factorized results must
+expand to exactly the flat rows.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (GraphDB, GraphStats, LFTJ, Minesweeper, PlanCache,
+                        VLFTJ, BinaryJoin, CountingYannakakis, HybridJoin,
+                        count, get_query)
+from repro.core import engine as engine_mod
+from repro.core.planner import estimate_emission, plan_query
+from repro.graphs import CSRGraph, node_sample, powerlaw_cluster
+from repro.results import FactorizedResult, ResultSet, factorize_vlftj
+from repro.serve import QueryRequest, QueryServer
+
+from conftest import make_gdb
+
+FIXTURE_QUERIES = ["3-clique", "4-cycle", "3-path", "1-tree", "2-comb",
+                   "2-lollipop"]
+#: engines with full query coverage; yannakakis only plans filter-free
+#: β-acyclic forests, so it gets its own (deterministic) pairing below.
+GENERAL_ENGINES = ["vlftj", "binary", "minesweeper_ref", "hybrid", "auto"]
+ACYCLIC_QUERIES = ["3-path", "1-tree", "2-comb"]
+
+
+@pytest.fixture(scope="module")
+def gdb():
+    return make_gdb(50, 3, seed=3)
+
+
+@pytest.fixture(scope="module")
+def ref_rows(gdb):
+    cache = {}
+
+    def get(qname):
+        if qname not in cache:
+            cache[qname] = engine_mod.enumerate(
+                get_query(qname), gdb, engine="lftj_ref", mode="flat")
+        return cache[qname]
+
+    return get
+
+
+# ---------------------------------------------------------------------------
+# unified engine.enumerate parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qname", FIXTURE_QUERIES)
+@pytest.mark.parametrize("engine", GENERAL_ENGINES)
+def test_enumerate_matches_lftj_ref(gdb, ref_rows, qname, engine):
+    q = get_query(qname)
+    ref = ref_rows(qname)
+    res = engine_mod.enumerate(q, gdb, engine=engine)
+    assert res.vars == ref.vars == q.variables
+    got = res.expand()          # flat or factorized — same API
+    assert got.dtype == np.int64
+    np.testing.assert_array_equal(got, ref.rows)
+    assert res.count() == count(q, gdb, engine="lftj_ref")
+
+
+@pytest.mark.parametrize("qname", ACYCLIC_QUERIES)
+def test_enumerate_yannakakis_matches_lftj_ref(gdb, ref_rows, qname):
+    res = engine_mod.enumerate(get_query(qname), gdb, engine="yannakakis")
+    np.testing.assert_array_equal(res.expand(), ref_rows(qname).rows)
+
+
+def test_enumerate_order_and_plan_cache(gdb):
+    q = get_query("3-clique")
+    order = ("c", "a", "b")
+    res = engine_mod.enumerate(q, gdb, engine="vlftj", order=order,
+                               mode="flat")
+    assert res.vars == order
+    back = res.reorder(q.variables)
+    np.testing.assert_array_equal(
+        back.rows,
+        engine_mod.enumerate(q, gdb, engine="vlftj", mode="flat").rows)
+    # enumeration plans cache separately from counting plans
+    cache = PlanCache()
+    stats = GraphStats.of(gdb)
+    p_rows = cache.get_or_plan(q, stats, "vlftj", output="rows")
+    p_cnt = cache.get_or_plan(q, stats, "vlftj")
+    assert p_rows.output_mode in ("flat", "factorized")
+    assert p_cnt.output_mode == "count"
+    assert cache.misses == 2
+    assert cache.get_or_plan(q, stats, "vlftj", output="rows") is p_rows
+
+
+# ---------------------------------------------------------------------------
+# the normalized per-engine contract
+# ---------------------------------------------------------------------------
+
+def _engines_for(q, gdb):
+    db = gdb.to_database()
+    engines = [LFTJ(q, db), Minesweeper(q, db), BinaryJoin(q, db),
+               VLFTJ(q, gdb), HybridJoin(q, gdb)]
+    try:
+        engines.append(CountingYannakakis(q, gdb))
+    except ValueError:
+        pass
+    return engines
+
+
+@pytest.mark.parametrize("qname", ["3-clique", "3-path"])
+def test_engine_method_contract(gdb, qname):
+    """One contract: int64, columns = output_vars, lex order, limit
+    truncates after ordering."""
+    q = get_query(qname)
+    for eng in _engines_for(q, gdb):
+        rows = eng.enumerate()
+        assert rows.dtype == np.int64
+        assert rows.shape[1] == len(eng.output_vars)
+        assert set(eng.output_vars) == set(q.variables)
+        order = np.lexsort(rows.T[::-1])
+        assert (order == np.arange(rows.shape[0])).all(), type(eng)
+        np.testing.assert_array_equal(eng.enumerate(limit=7), rows[:7])
+        assert eng.enumerate(limit=0).shape == (0, rows.shape[1])
+
+
+def test_lftj_limit_truncates_after_ordering(gdb):
+    """The documented lftj_ref semantics: emission order is the lex
+    order, so limit= equals post-sort truncation (the cursor contract)."""
+    q = get_query("3-clique")
+    eng = LFTJ(q, gdb.to_database())
+    full = eng.enumerate()
+    assert full.shape[0] > 10
+    for m in (1, 5, full.shape[0], full.shape[0] + 10):
+        np.testing.assert_array_equal(eng.enumerate(limit=m), full[:m])
+
+
+def test_empty_result_all_engines():
+    g = powerlaw_cluster(40, 3, seed=5)
+    empty = {f"v{i}": np.zeros(0, dtype=np.int64) for i in range(1, 5)}
+    gdb = GraphDB(g, empty)
+    q = get_query("3-path")
+    k = len(q.variables)
+    for engine in ["lftj_ref", "minesweeper_ref", "binary", "vlftj",
+                   "yannakakis", "hybrid", "auto"]:
+        res = engine_mod.enumerate(q, gdb, engine=engine)
+        assert res.count() == 0
+        assert res.expand().shape == (0, k), engine
+    cur = engine_mod.stream(q, gdb, engine="vlftj")
+    assert cur.next_page() is None
+    assert cur.exhausted
+
+
+# ---------------------------------------------------------------------------
+# cursor: pages concatenate, bounded memory
+# ---------------------------------------------------------------------------
+
+def test_cursor_pages_concatenate_and_stay_bounded():
+    gdb = make_gdb(200, 4, seed=2)
+    q = get_query("3-path")                       # large fanout output
+    page = 256
+    cur = engine_mod.stream(q, gdb, engine="vlftj", page_rows=page)
+    pages = list(cur)
+    assert all(p.shape[0] == page for p in pages[:-1])
+    assert 0 < pages[-1].shape[0] <= page
+    rows = np.concatenate(pages)
+    ex = VLFTJ(q, gdb)
+    full = engine_mod.enumerate(q, gdb, engine="vlftj", order=cur.vars,
+                                mode="flat").rows
+    assert full.shape[0] > 4 * page               # paging is non-trivial
+    np.testing.assert_array_equal(rows, full)
+    # the documented bound: one page plus one expansion chunk
+    assert cur.stats["peak_buffer_rows"] <= page + max(ex.width, page)
+    assert cur.stats["chunks"] > 1
+
+
+def test_cursor_bounded_on_dense_final_level():
+    """A final level with no bound edge neighbor fans out by the unary
+    domain, not the adjacency width — the cursor must stream it row by
+    row, slicing extension runs to the page size (regression: the
+    chunked path used to buffer cf x |domain| rows here)."""
+    from repro.core import parse
+    from repro.results import ResultCursor
+
+    gdb = make_gdb(200, 4, seed=2)
+    q = parse("edge(a,b), v1(c)", "edge-x-unary")
+    page = 64
+    ex = VLFTJ(q, gdb, gao=("a", "b", "c"))   # c is dense by construction
+    cur = ResultCursor(ex, page_rows=page)
+    pages = list(cur)
+    rows = np.concatenate(pages)
+    ref = engine_mod.enumerate(q, gdb, engine="lftj_ref",
+                               order=("a", "b", "c"), mode="flat")
+    assert ref.count() > 10 * page
+    np.testing.assert_array_equal(rows, ref.rows)
+    assert cur.stats["peak_buffer_rows"] <= 2 * page
+
+
+def test_server_cursor_registry_is_capped(gdb300):
+    srv = QueryServer(gdb300.csr, page_rows=8, max_open_cursors=3)
+    tokens = []
+    for i in range(5):
+        r = srv.execute(QueryRequest("3-clique", selectivity=8, seed=0,
+                                     engine="vlftj", limit=8))
+        assert r.next_cursor is not None
+        tokens.append(r.next_cursor)
+    assert len(srv._cursors) == 3
+    with pytest.raises(ValueError):              # oldest were evicted
+        srv.execute(QueryRequest("3-clique", cursor=tokens[0]))
+    assert srv.execute(                          # newest still resumes
+        QueryRequest("3-clique", cursor=tokens[-1])).rows.shape[0] == 8
+
+
+def test_cursor_take_and_exhaustion(gdb):
+    q = get_query("3-clique")
+    full = engine_mod.enumerate(q, gdb, engine="vlftj", mode="flat")
+    cur = engine_mod.stream(q, gdb, engine="vlftj", page_rows=8)
+    first = cur.take(11)
+    rest = []
+    while not cur.exhausted:
+        rest.append(cur.take(17))
+    got = np.concatenate([first] + rest)
+    np.testing.assert_array_equal(
+        got, full.reorder(cur.vars).rows)
+    assert cur.take(5).shape == (0, 3)            # drained stays drained
+
+
+# ---------------------------------------------------------------------------
+# factorized results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("qname", ["3-path", "2-lollipop", "3-clique"])
+def test_factorized_expand_matches_flat(gdb, qname):
+    q = get_query(qname)
+    flat = engine_mod.enumerate(q, gdb, engine="vlftj", mode="flat")
+    fact = engine_mod.enumerate(q, gdb, engine="vlftj", mode="factorized")
+    assert isinstance(fact, FactorizedResult)
+    assert fact.count() == flat.count()
+    np.testing.assert_array_equal(fact.expand(), flat.rows)
+
+
+def test_factorized_native_vs_from_rows(gdb):
+    """The native builder (no flat materialization) must equal the
+    trie-compression of the flat rows, level by level."""
+    q = get_query("3-path")
+    plan = plan_query(q, GraphStats.of(gdb), engine="vlftj", output="rows")
+    ex = VLFTJ(q, gdb, plan=plan)
+    native = factorize_vlftj(ex)
+    flat = ex.enumerate()
+    rebuilt = FactorizedResult.from_rows(plan.gao, flat, sort=False)
+    assert native.vars == rebuilt.vars
+    for a, b in zip(native.levels, rebuilt.levels):
+        np.testing.assert_array_equal(a.values, b.values)
+        np.testing.assert_array_equal(a.parent, b.parent)
+    # fanout query: the trie is smaller than the flat materialization
+    assert native.nbytes < flat.nbytes
+    # prefix projection truncates the trie (distinct prefixes, no expand)
+    prefix = native.project(plan.gao[:2])
+    expect = np.unique(flat[:, :2], axis=0)
+    np.testing.assert_array_equal(prefix.rows, expect)
+
+
+def test_result_set_project_and_reorder(gdb):
+    q = get_query("3-clique")
+    rs = engine_mod.enumerate(q, gdb, engine="vlftj", mode="flat")
+    pr = rs.project(("a", "b"))
+    np.testing.assert_array_equal(pr.rows, np.unique(rs.rows[:, :2], axis=0))
+    assert isinstance(rs.reorder(("b", "c", "a")), ResultSet)
+    assert estimate_emission(q, rs.vars, GraphStats.of(gdb))[0] > 0
+
+
+# ---------------------------------------------------------------------------
+# backward expansion engines under random graphs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_property_backward_expansion_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n, m = 24, 70
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    g = CSRGraph.from_edges(src[keep], dst[keep], n_nodes=n)
+    unary = {f"v{i}": rng.choice(n, 7, replace=False) for i in range(1, 5)}
+    gdb = GraphDB(g, unary)
+    for qname in ["3-path", "2-comb", "2-lollipop"]:
+        q = get_query(qname)
+        ref = engine_mod.enumerate(q, gdb, engine="lftj_ref", mode="flat")
+        for engine in (["yannakakis", "hybrid"]
+                       if qname != "2-lollipop" else ["hybrid"]):
+            got = engine_mod.enumerate(q, gdb, engine=engine, mode="flat")
+            np.testing.assert_array_equal(got.rows, ref.rows), (qname,
+                                                                engine)
+
+
+# ---------------------------------------------------------------------------
+# dist + serve
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def gdb300():
+    g = powerlaw_cluster(300, 4, seed=11)
+    unary = {f"v{i}": node_sample(g.n_nodes, 6, seed=i)
+             for i in range(1, 5)}
+    return GraphDB(g, unary)
+
+
+@pytest.mark.parametrize("qname", ["3-clique", "3-path"])
+def test_partitioned_enumerate_merges_parts(gdb300, qname):
+    from repro.dist.sharded_join import PartitionedJoin
+    q = get_query(qname)
+    pj = PartitionedJoin(q, gdb300, n_workers=3, granularity=2)
+    rs = pj.enumerate(page_rows=128)
+    assert rs.vars == pj.executor.gao
+    ref = engine_mod.enumerate(q, gdb300, engine="vlftj",
+                               order=pj.executor.gao, mode="flat")
+    np.testing.assert_array_equal(rs.rows, ref.rows)
+    np.testing.assert_array_equal(
+        pj.enumerate(limit=13, page_rows=5).rows, ref.rows[:13])
+
+
+def test_server_pagination_roundtrip(gdb300):
+    g = gdb300.csr
+    srv = QueryServer(g, page_rows=64)
+    first = srv.execute(QueryRequest("3-clique", selectivity=8, seed=0,
+                                     engine="vlftj", limit=50))
+    assert first.rows.shape[0] == 50
+    assert first.count == 50
+    assert first.next_cursor is not None
+    assert first.plan is not None and first.plan.output_mode != "count"
+    pages, tok = [first.rows], first.next_cursor
+    while tok is not None:
+        nxt = srv.execute(QueryRequest("3-clique", cursor=tok, limit=50))
+        pages.append(nxt.rows)
+        tok = nxt.next_cursor
+    got = np.concatenate(pages)
+    gdb = srv._gdb_for(8, 0)
+    full = engine_mod.enumerate(get_query("3-clique"), gdb,
+                                engine="vlftj", order=first.row_vars,
+                                mode="flat")
+    np.testing.assert_array_equal(got, full.rows)
+    assert not srv._cursors                        # drained and dropped
+    with pytest.raises(ValueError):
+        srv.execute(QueryRequest("3-clique", cursor="cur-999"))
+    # same-shape rows requests hit the enumeration plan cache entry
+    again = srv.execute(QueryRequest("3-clique", selectivity=8, seed=0,
+                                     engine="vlftj", limit=10))
+    assert again.plan_cached
+
+
+def test_server_pagination_dist_route(gdb300):
+    srv = QueryServer(gdb300.csr, dist_edge_threshold=1, page_rows=64)
+    res = srv.execute(QueryRequest("3-clique", selectivity=8, seed=0,
+                                   engine="vlftj", limit=40))
+    assert res.engine == "vlftj+partitioned"
+    pages, tok = [res.rows], res.next_cursor
+    while tok is not None:
+        nxt = srv.execute(QueryRequest("3-clique", cursor=tok, limit=40))
+        pages.append(nxt.rows)
+        tok = nxt.next_cursor
+    plain = QueryServer(gdb300.csr, page_rows=64)
+    ref = plain.execute(QueryRequest("3-clique", selectivity=8, seed=0,
+                                     engine="vlftj",
+                                     limit=10 ** 9))
+    np.testing.assert_array_equal(np.concatenate(pages), ref.rows)
+
+
+def test_execute_many_mixes_counts_rows_and_cursors(gdb300):
+    srv = QueryServer(gdb300.csr, page_rows=32)
+    res = srv.execute_many([
+        QueryRequest("3-clique", selectivity=8, seed=0, limit=20),
+        QueryRequest("3-clique", selectivity=8, seed=0, limit=20),
+        QueryRequest("3-clique", selectivity=8, seed=0),
+    ])
+    assert res[0].rows.shape == (20, 3) and res[1].rows.shape == (20, 3)
+    np.testing.assert_array_equal(res[0].rows, res[1].rows)
+    assert res[1].plan_cached                      # same enumeration plan
+    assert res[2].rows is None and res[2].count > 0
+    cont = srv.execute_many(
+        [QueryRequest("3-clique", cursor=res[0].next_cursor, limit=20)])
+    assert cont[0].rows.shape[0] == 20
+    assert not np.array_equal(cont[0].rows, res[0].rows)
