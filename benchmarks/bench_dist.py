@@ -1,6 +1,7 @@
-"""Distributed scaling benchmark: sharded join throughput + compression.
+"""Distributed scaling benchmark: sharded join, skew, CSR sharding,
+compression.
 
-Two measurements, written to ``BENCH_dist.json`` by ``record_baseline``:
+Four measurements, written to ``BENCH_dist.json`` by ``record_baseline``:
 
 * ``join/<n>shard`` — one vectorized-LFTJ triangle expansion level over
   the full edge frontier via ``dist.spmd_join_step``, frontier
@@ -8,6 +9,16 @@ Two measurements, written to ``BENCH_dist.json`` by ``record_baseline``:
   ``XLA_FLAGS=--xla_force_host_platform_device_count=8``; on real
   accelerators the same code path shards over the physical mesh).  The
   derived field carries rows/s and the verified triangle count.
+* ``skew/{static,rebalanced}`` — the adaptive-execution headline: a
+  3-path join over a Zipf graph run level-synchronously on 8 shards
+  (``dist.rebalance.AdaptiveJoin``) with the static first-level deal
+  frozen vs mid-join frontier re-deals.  The derived fields carry wall
+  and cost-model makespans plus the rebalanced/static ratio — the
+  acceptance bar is ratio <= 0.7.
+* ``sharded_csr/<query>`` — ``dist.sharded_csr.sharded_count`` over a
+  row-partitioned CSR (8 shards) on every tier-1 query shape, each
+  verified equal to the replicated-CSR count (``match=1``), with the
+  exchanged adjacency volume.
 * ``train/{uncompressed,compressed}_step`` + ``loss_curves`` — the tiny
   transformer's *sharded* data-parallel train step with an f32-pmean
   wire (``make_dp_train_step``) vs the int8 error-feedback compressed
@@ -18,7 +29,8 @@ Two measurements, written to ``BENCH_dist.json`` by ``record_baseline``:
 
 Run standalone (``python -m benchmarks.bench_dist``) this module forces
 8 host devices before jax initializes; under ``benchmarks.run`` it
-measures whatever device count the process already has.
+measures whatever device count the process already has.  ``--skew``
+runs only the skew section (fast inner loop for re-balancer work).
 """
 import os
 import sys
@@ -39,12 +51,15 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core import GraphDB, VLFTJ, get_query
+from repro.core import engine as engine_mod
 from repro.core.plan import executor_geometry
 from repro.dist.compressed_step import (init_compressed_state,
                                         make_compressed_train_step,
                                         make_dp_train_step)
+from repro.dist.rebalance import AdaptiveJoin
+from repro.dist.sharded_csr import ShardedGraphDB, sharded_count
 from repro.dist.sharded_join import spmd_join_step
-from repro.graphs import powerlaw_cluster
+from repro.graphs import node_sample, powerlaw_cluster, zipf_graph
 from repro.models.transformer import TransformerConfig, init_params, loss_fn
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 
@@ -87,6 +102,88 @@ def _join_rows(quick: bool) -> list[Row]:
         rows.append(Row(f"join/{shards}shard", us,
                         f"rows={len(fr)};rows_per_s={rps:.0f};"
                         f"triangles={total}"))
+    return rows
+
+
+SKEW_SHARDS = 16
+CSR_SHARDS = 8
+SHARDED_CSR_QUERIES = ("3-clique", "4-clique", "4-cycle", "3-path",
+                       "2-lollipop", "3-lollipop")
+
+
+def _skew_rows(quick: bool) -> list[Row]:
+    """Static vs mid-join-rebalanced makespan on a Zipf 3-path.
+
+    The workload is the regime where mid-join skew is real: *selective*
+    seeds (an RDBMS-style ``v1`` predicate leaves ~80 seeds, so the
+    law-of-large-numbers self-balancing of big frontiers never kicks
+    in) over an assortative Zipf graph (hubs neighbor hubs — a seed's
+    subtree mass is badly predicted by its own degree, which is all the
+    static first-level deal can see).  Makespans are min-of-3 per
+    variant; the derived fields also carry the deterministic cost-model
+    ratio the tests assert on.  ``quick`` deliberately does NOT scale
+    this section down: below this graph size per-shard level work drops
+    under the per-dispatch fixed cost and wall makespan stops tracking
+    the skew at all (the whole section is ~1-2 min).
+    """
+    n, m = (8000, 200000)
+    g = zipf_graph(n, m, alpha=1.4, seed=0)
+    unary = {f"v{i}": node_sample(g.n_nodes, 150, seed=i)
+             for i in range(1, 5)}
+    gdb = GraphDB(g, unary)
+    q = get_query("3-path")
+    reps = 3
+    runs = {}
+    for label, rebalance in (("static", False), ("rebalanced", True)):
+        aj = AdaptiveJoin(q, gdb, n_shards=SKEW_SHARDS, threshold=1.2,
+                          rebalance=rebalance)
+        aj.count()          # warm the level kernels
+        best, count = None, None
+        for _ in range(reps):
+            aj2 = AdaptiveJoin(q, gdb, n_shards=SKEW_SHARDS,
+                               threshold=1.2, rebalance=rebalance)
+            count = aj2.count()
+            if best is None or aj2.stats["makespan"] < best["makespan"]:
+                best = aj2.stats
+        runs[label] = (best, count)
+    ratio = (runs["rebalanced"][0]["makespan"]
+             / max(runs["static"][0]["makespan"], 1e-12))
+    cost_ratio = (runs["rebalanced"][0]["cost_makespan"]
+                  / max(runs["static"][0]["cost_makespan"], 1e-12))
+    assert runs["static"][1] == runs["rebalanced"][1]
+    rows = []
+    for label in ("static", "rebalanced"):
+        st, cnt = runs[label]
+        rows.append(Row(
+            f"skew/{label}", st["makespan"] * 1e6,
+            f"count={cnt};shards={SKEW_SHARDS};"
+            f"cost_makespan={st['cost_makespan']:.0f};"
+            f"rebalances={len(st.get('rebalances', []))};"
+            + (f"makespan_ratio={ratio:.3f};"
+               f"cost_ratio={cost_ratio:.3f}"
+               if label == "rebalanced" else
+               f"total_time_us={st['total_time'] * 1e6:.0f}")))
+    return rows
+
+
+def _sharded_csr_rows(quick: bool) -> list[Row]:
+    """Row-partitioned-CSR count parity on every tier-1 query shape."""
+    g = powerlaw_cluster(300 if quick else 1000, 4, seed=11)
+    unary = {f"v{i}": node_sample(g.n_nodes, 6, seed=i)
+             for i in range(1, 5)}
+    gdb = GraphDB(g, unary)
+    rows: list[Row] = []
+    for qname in SHARDED_CSR_QUERIES:
+        sg = ShardedGraphDB(g, CSR_SHARDS, unary)
+        ref = engine_mod.count(get_query(qname), gdb, engine="vlftj")
+        got, us = timed(lambda: sharded_count(get_query(qname), sg),
+                        repeats=1, timeout_s=300)
+        assert got == ref, (qname, got, ref)
+        rows.append(Row(
+            f"sharded_csr/{qname}", us,
+            f"count={got};match={int(got == ref)};"
+            f"shards={CSR_SHARDS};"
+            f"exchanged_values={sg.exchange['values']}"))
     return rows
 
 
@@ -137,15 +234,18 @@ def _train_rows(quick: bool) -> tuple[list[Row], dict]:
     return rows, curves
 
 
-def run(quick: bool = True) -> list[Row]:
-    rows = _join_rows(quick)
+def run(quick: bool = True, skew_only: bool = False) -> list[Row]:
+    if skew_only:
+        return _skew_rows(quick)
+    rows = _join_rows(quick) + _skew_rows(quick) + _sharded_csr_rows(quick)
     train_rows, _ = _train_rows(quick)
     return rows + train_rows
 
 
 def record_baseline(path: str | None = None, quick: bool = True) -> dict:
-    """Write BENCH_dist.json: shard scaling + compression loss curves."""
-    rows = _join_rows(quick)
+    """Write BENCH_dist.json: shard scaling, skew re-balancing,
+    sharded-CSR parity, and compression loss curves."""
+    rows = _join_rows(quick) + _skew_rows(quick) + _sharded_csr_rows(quick)
     train_rows, curves = _train_rows(quick)
     payload = {
         "bench": "dist",
@@ -169,12 +269,24 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description="distributed join/compression "
                                              "scaling benchmark")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skew", action="store_true",
+                    help="run only the static-vs-rebalanced skew section")
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="write the BENCH json here instead of CSV rows")
     a = ap.parse_args()
-    if a.out:
+    if a.out and a.skew:
+        rows = _skew_rows(quick=a.quick)
+        payload = {"bench": "dist-skew", "quick": a.quick,
+                   "rows": [{"name": r.name,
+                             "us_per_call": round(r.us_per_call, 2),
+                             "derived": r.derived} for r in rows]}
+        with open(a.out, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"wrote {a.out} ({len(payload['rows'])} rows)")
+    elif a.out:
         payload = record_baseline(path=a.out, quick=a.quick)
         print(f"wrote {a.out} ({len(payload['rows'])} rows)")
     else:
-        for row in run(quick=a.quick):
+        for row in run(quick=a.quick, skew_only=a.skew):
             print(row.csv())

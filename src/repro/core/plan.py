@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import hashlib
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -218,6 +218,16 @@ class JoinPlan:
     :class:`~repro.results.FactorizedResult`).  For enumeration plans the
     planner costs flat-vs-factorized emission
     (``planner.estimate_emission``) and records the cheaper mode here.
+
+    ``level_callback`` is the adaptive-execution hook: when set, the
+    executing engine calls ``callback(level, frontier, mult)`` at every
+    GAO level boundary (after level ``level``'s frontier is built, before
+    the next level runs) and, if the callback returns a ``(frontier,
+    mult)`` pair, continues with that pair instead.  The distributed
+    layer uses it to re-deal skewed frontiers across shards mid-join
+    (``repro.dist.rebalance.FrontierRebalancer``).  The field is excluded
+    from equality/hashing — a plan with a callback attached still hits
+    the same :class:`~repro.core.planner.PlanCache` entry.
     """
 
     query: Query
@@ -231,6 +241,7 @@ class JoinPlan:
     agm_log2: float | None = None
     stats_fingerprint: str = ""
     output_mode: str = "count"
+    level_callback: object = field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
         if self.engine in ("vlftj", "lftj_ref") and not self.levels \

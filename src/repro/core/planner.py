@@ -54,7 +54,6 @@ def _cost_model(query: Query, gao: tuple[str, ...], stats: GraphStats,
     (``frontiers[-1]`` is the estimated output cardinality)."""
     levels = compile_levels(query, gao)
     n = max(1, stats.n_nodes)
-    d = max(1.0, stats.avg_degree)
     logd = math.log2(max(2, stats.max_degree))
     # the executor's padding defaults (shared with VLFTJ.__init__)
     width, chunk_rows = executor_geometry(stats.max_degree)
@@ -65,23 +64,22 @@ def _cost_model(query: Query, gao: tuple[str, ...], stats: GraphStats,
         sel_unary = 1.0
         for u in lp.unary:
             sel_unary *= stats.unary_selectivity(u)
-        sel_ineq = 0.5 ** (len(lp.lower) + len(lp.upper))
         if i == 0:
             frontier = n * sel_unary if seed_frontier is None \
                 else seed_frontier
             costs.append(float(n))          # bitmap-filtered domain scan
             frontiers.append(frontier)
             continue
+        # per-row survivor rate: the one survivor model, shared with the
+        # dist layer's re-balance pricing (estimate_extension_degree)
+        survive = estimate_extension_degree(lp, stats)
         if lp.edge_sources:
             extra_checks = max(0, len(lp.edge_sources) - 1)
             padded = math.ceil(frontier / chunk_rows) * chunk_rows * width
             work = padded * (1.0 + extra_checks * logd)
-            survive = d * ((d / n) ** extra_checks) * sel_unary * sel_ineq
         else:
             # no bound edge neighbor: host cross product with the domain
-            cand = n * sel_unary
-            work = frontier * cand
-            survive = cand * sel_ineq
+            work = frontier * n * sel_unary
         costs.append(max(work, 1.0))
         frontier = max(frontier * survive, 1e-6)
         frontiers.append(frontier)
@@ -120,6 +118,28 @@ def estimate_emission(query: Query, gao: tuple[str, ...],
     flat = out * len(gao)
     fact = 2.0 * sum(frontiers)
     return flat, fact
+
+
+def estimate_extension_degree(lp, stats: GraphStats) -> float:
+    """Expected per-row extension fanout of one GAO level.
+
+    The survivor model's per-level multiplier, factored out for the
+    distributed layer: a frontier shard's cost is (rows × this), and
+    ``repro.dist.rebalance`` compares shards on exactly that product when
+    deciding whether a mid-join re-deal is worth a shuffle.  Rows whose
+    probe vertex is known use the true adjacency length instead
+    (``rebalance.row_extension_costs``); this estimate is the fallback
+    when only :class:`GraphStats` is available."""
+    n = max(1, stats.n_nodes)
+    d = max(1.0, stats.avg_degree)
+    sel_unary = 1.0
+    for u in lp.unary:
+        sel_unary *= stats.unary_selectivity(u)
+    sel_ineq = 0.5 ** (len(lp.lower) + len(lp.upper))
+    if lp.edge_sources:
+        extra = max(0, len(lp.edge_sources) - 1)
+        return max(d * ((d / n) ** extra) * sel_unary * sel_ineq, 1e-6)
+    return max(n * sel_unary * sel_ineq, 1e-6)
 
 
 def estimate_yannakakis_cost(query: Query, stats: GraphStats) -> float:

@@ -193,7 +193,12 @@ class VLFTJ:
         # keep chunk x width under the element budget
         self.chunk_rows = self._chunk_cap
         self.stats = {"chunks": 0, "frontier_peak": 0, "candidates": 0,
-                      "tile_rows": 0, "bsearch_rows": 0}
+                      "tile_rows": 0, "bsearch_rows": 0,
+                      "ll_compiles": 0, "ll_calls": 0}
+        # AOT-compiled final-level executables keyed on frontier geometry
+        # (see last_level_extensions) — one compile per shape, then the
+        # page loop skips the jitted dispatch path entirely
+        self._ll_compiled: dict = {}
 
     # -- host helpers --------------------------------------------------------
     def _domain_values(self, lp: LevelPlan) -> np.ndarray:
@@ -251,11 +256,21 @@ class VLFTJ:
 
     # -- main loop -----------------------------------------------------------
     def _run(self, count_only: bool = True, frontier: np.ndarray | None = None,
-             mult: np.ndarray | None = None, max_levels: int | None = None):
+             mult: np.ndarray | None = None, max_levels: int | None = None,
+             start_level: int | None = None):
         """Advance the frontier through GAO levels ``< max_levels``
         (default: all).  ``repro.results.ResultCursor`` passes
         ``max_levels=len(plan)-1`` to materialize only the penultimate
-        frontier and re-enter the final level itself, page by page."""
+        frontier and re-enter the final level itself, page by page.
+
+        ``start_level`` resumes mid-join from a frontier with that many
+        columns already bound (default: inferred from the frontier width)
+        — the level-synchronous distributed driver
+        (``repro.dist.rebalance.AdaptiveJoin``) advances shards one level
+        at a time this way.  When the plan carries a ``level_callback``
+        it runs at every interior level boundary and may replace the
+        ``(frontier, mult)`` pair (e.g. re-dealing rows across shards).
+        """
         gdb = self.gdb
         indptr, indices = gdb.dev("indptr"), gdb.dev("indices")
         n_levels = len(self.plan) if max_levels is None else max_levels
@@ -264,8 +279,20 @@ class VLFTJ:
         frontier = np.asarray(frontier, dtype=np.int32)
         if mult is None:
             mult = np.ones(frontier.shape[0], dtype=np.int64)
+        start = frontier.shape[1] if start_level is None else start_level
+        cb = self.join_plan.level_callback
+
+        def boundary(level, frontier, mult):
+            if cb is None or level >= n_levels - 1:
+                return frontier, mult
+            upd = cb(level, frontier, mult)
+            if upd is None:
+                return frontier, mult
+            return (np.asarray(upd[0], dtype=np.int32),
+                    np.asarray(upd[1], dtype=np.int64))
+
         total = 0
-        for level in range(1, n_levels):
+        for level in range(start, n_levels):
             lp = self.plan[level]
             bitmaps = tuple(gdb.dev(f"bitmap:{u}") for u in lp.unary)
             last = level == n_levels - 1
@@ -276,6 +303,7 @@ class VLFTJ:
                 total += add
                 if last_count:
                     return total
+                frontier, mult = boundary(level, frontier, mult)
                 continue
             C = frontier.shape[0]
             if C == 0:
@@ -328,6 +356,7 @@ class VLFTJ:
                   if new_vals else np.zeros((0, 1), np.int32))], axis=1)
             mult = (np.concatenate(new_mult) if new_mult
                     else np.zeros(0, np.int64))
+            frontier, mult = boundary(level, frontier, mult)
             self.stats["frontier_peak"] = max(self.stats["frontier_peak"],
                                               frontier.shape[0])
         if count_only:
@@ -335,6 +364,26 @@ class VLFTJ:
         return frontier
 
     # -- enumeration support -------------------------------------------------
+    def last_level_counts(self, frontier: np.ndarray,
+                          row_valid: np.ndarray | None = None) -> np.ndarray:
+        """Surviving final-level extension *counts* per penultimate-
+        frontier row (unit multiplicity) — the cheap pass the adaptive
+        cursor uses to size expansion chunks by actual fanout instead of
+        the worst-case tile width.  Same constraint semantics as
+        :meth:`last_level_extensions`; shares its AOT-compile cache."""
+        lp = self.plan[-1]
+        frontier = np.asarray(frontier, dtype=np.int32)
+        C = frontier.shape[0]
+        if row_valid is None:
+            row_valid = np.ones(C, dtype=bool)
+        if C == 0:
+            return np.zeros(0, dtype=np.int64)
+        if not lp.edge_sources:
+            counts, _ = self.last_level_extensions(frontier, row_valid)
+            return counts
+        out = self._final_level_call(frontier, row_valid, count_only=True)
+        return np.asarray(out, dtype=np.int64)
+
     def last_level_extensions(self, frontier: np.ndarray,
                               row_valid: np.ndarray | None = None
                               ) -> tuple[np.ndarray, np.ndarray]:
@@ -369,13 +418,29 @@ class VLFTJ:
             flat = (np.concatenate(out) if out
                     else np.zeros(0, dtype=np.int64))
             return counts, flat.astype(np.int64)
+        cand, keep = self._final_level_call(frontier, row_valid,
+                                            count_only=False)
+        counts = keep.sum(axis=1).astype(np.int64)
+        return counts, cand[keep].astype(np.int64)
+
+    def _final_level_call(self, frontier: np.ndarray, row_valid: np.ndarray,
+                          count_only: bool):
+        """Dispatch the final-level kernel for one frontier chunk.
+
+        ``repro.results.ResultCursor`` re-enters this level once per
+        page with an identical geometry, so non-``bsearch2`` modes are
+        AOT-compiled once per ``(shape, count_only)`` and the compiled
+        executable is dispatched directly — no per-page jit cache probe
+        (static-arg hashing + aval matching).
+        """
+        lp = self.plan[-1]
         bitmaps = tuple(self.gdb.dev(f"bitmap:{u}") for u in lp.unary)
         mode = self.check_mode if self.check_mode in ("tile", "bsearch2") \
             else "bsearch"
         kw = dict(probe_cols=lp.edge_sources, n_unary=len(bitmaps),
                   lower_cols=lp.lower, upper_cols=lp.upper,
                   width=self.width, n_iter=self.n_iter,
-                  needs_degree=lp.needs_degree, count_only=False,
+                  needs_degree=lp.needs_degree, count_only=count_only,
                   check_mode=mode,
                   check_width=self.tile_width if mode == "tile" else 0,
                   rotate_checks=self.rotate_checks)
@@ -383,12 +448,26 @@ class VLFTJ:
             kw.update(n_iter=self.n_iter1, n_iter2=self.n_iter2,
                       summary=self.gdb.dev(f"summary:{self.summary_stride}"),
                       summary_stride=self.summary_stride)
-        cand, keep = (np.asarray(x) for x in _expand_level(
-            self.gdb.dev("indptr"), self.gdb.dev("indices"), bitmaps,
-            jnp.asarray(frontier), jnp.ones(C, dtype=jnp.int64),
-            jnp.asarray(row_valid), **kw))
-        counts = keep.sum(axis=1).astype(np.int64)
-        return counts, cand[keep].astype(np.int64)
+        args = (self.gdb.dev("indptr"), self.gdb.dev("indices"), bitmaps,
+                jnp.asarray(frontier),
+                jnp.ones(frontier.shape[0], dtype=jnp.int64),
+                jnp.asarray(row_valid))
+        self.stats["ll_calls"] += 1
+        if mode == "bsearch2":
+            # summary is a traced kwarg, not a static — the AOT signature
+            # below would drop it; this mode keeps the jitted dispatch
+            out = _expand_level(*args, **kw)
+        else:
+            key = (frontier.shape, count_only)
+            fn = self._ll_compiled.get(key)
+            if fn is None:
+                self.stats["ll_compiles"] += 1
+                fn = _expand_level.lower(*args, **kw).compile()
+                self._ll_compiled[key] = fn
+            out = fn(*args)
+        if count_only:
+            return np.asarray(out)
+        return tuple(np.asarray(x) for x in out)
 
     # -- public API ----------------------------------------------------------
     def count(self) -> int:

@@ -25,6 +25,18 @@ def _axis_size(axis_name) -> int:
     return jax.lax.psum(1, axis_name)
 
 
+def ring_schedule(axis_name) -> tuple[int, list[tuple[int, int]]]:
+    """(ring size, ppermute permutation) for a one-hop rotation.
+
+    The single source of the ring wiring: :func:`ring_all_reduce` and the
+    sharded-CSR adjacency exchange (``dist.sharded_csr``) both rotate
+    payloads device ``i`` -> ``i+1`` with this permutation, so after hop
+    ``s`` device ``me`` holds the block that started on ``(me - s) % n``.
+    """
+    n = _axis_size(axis_name)
+    return n, [(i, (i + 1) % n) for i in range(n)]
+
+
 def ring_all_reduce(x, axis_name):
     """Sum ``x`` across ``axis_name`` with a two-phase ppermute ring.
 
@@ -33,7 +45,7 @@ def ring_all_reduce(x, axis_name):
     ``(i+1) % n``, and ``n-1`` all-gather hops replicate every chunk.
     Returns the all-reduced block, same shape as ``x``, on every device.
     """
-    n = _axis_size(axis_name)
+    n, perm = ring_schedule(axis_name)
     if n == 1:
         return x
     rows = x.shape[0]
@@ -41,7 +53,6 @@ def ring_all_reduce(x, axis_name):
     xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
     chunks = xp.reshape((n, (rows + pad) // n) + x.shape[1:])
     me = jax.lax.axis_index(axis_name)
-    perm = [(i, (i + 1) % n) for i in range(n)]
 
     def chunk(j):
         return jnp.take(chunks, j, axis=0)

@@ -1,0 +1,131 @@
+"""A real worker pool for the partitioned join (no more simulation).
+
+``PartitionedJoin`` used to *simulate* its workers — parts ran
+sequentially and ``makespan`` was what a pool would have seen.  This
+module supplies the actual pool: one ``concurrent.futures`` worker per
+alive schedule entry, each draining its owned parts **in schedule
+order**, so the deterministic deal from
+:func:`repro.train.stragglers.reassign_shards` is preserved exactly and
+a re-run assigns every part to the same worker.
+
+Backend selection follows payload picklability: a task whose function
+and arguments survive ``pickle`` can cross a process boundary and gets a
+``spawn``-context :class:`~concurrent.futures.ProcessPoolExecutor`
+(``fork`` is unsafe once jax/XLA is initialized); anything closing over
+device arrays or jitted state stays in threads — the join workloads are
+in the second camp, and that is the right call anyway: the expensive
+part of a join part runs inside XLA, which releases the GIL, so threads
+give real concurrency while sharing one jit cache.
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import time
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from typing import Callable, Sequence
+
+
+class _DeviceState(Exception):
+    """Raised mid-pickle when the payload holds device-resident arrays."""
+
+
+def pick_backend(fn: Callable, sample_arg=None) -> str:
+    """'process' when ``(fn, sample_arg)`` can *usefully* cross a process
+    boundary: it pickles and carries no device-resident jax state.
+
+    jax arrays technically pickle (as host copies), but shipping one to
+    a spawned worker re-stages the buffer and pays a fresh XLA
+    init + compile there — strictly worse than a thread sharing the live
+    jit cache.  So device state votes 'thread' even though ``pickle``
+    alone would say yes."""
+    try:
+        dev_types: tuple = ()
+        try:
+            import jax
+            dev_types = (jax.Array,)
+        except Exception:       # pragma: no cover - jax is a core dep
+            pass
+
+        class _Probe(pickle.Pickler):
+            def reducer_override(self, obj):
+                if dev_types and isinstance(obj, dev_types):
+                    raise _DeviceState
+                return NotImplemented
+
+        _Probe(io.BytesIO(), protocol=5).dump((fn, sample_arg))
+        return "process"
+    except Exception:
+        return "thread"
+
+
+def _drain(fn: Callable, owned: list[int], parts: Sequence) -> list[tuple]:
+    """Run one worker's parts in schedule order; (pid, result, seconds)."""
+    out = []
+    for pid in owned:
+        t0 = time.perf_counter()
+        res = fn(parts[pid])
+        out.append((pid, res, time.perf_counter() - t0))
+    return out
+
+
+class WorkerPool:
+    """Deterministic-schedule pool over ``concurrent.futures``.
+
+    ``schedule`` maps worker id -> owned part ids (the
+    ``reassign_shards`` output — dead workers simply have no entry).
+    :meth:`run` executes ``fn(parts[pid])`` for every scheduled part,
+    one concurrent worker per schedule entry, and returns
+    ``(part_results, part_time, wall_time, backend)`` where
+    ``part_time`` holds each part's own execution seconds (the quantity
+    the makespan stats aggregate — pool overhead shows up in
+    ``wall_time``, not in the schedule accounting) and ``backend`` is
+    what actually ran ('sequential' whenever <= 1 worker is alive, no
+    matter what was requested).
+
+    ``backend``: 'thread', 'process', 'sequential', or 'auto' (decide
+    per :func:`pick_backend` on the first scheduled part).
+    """
+
+    def __init__(self, schedule: dict[int, list[int]],
+                 backend: str = "auto"):
+        if backend not in ("auto", "thread", "process", "sequential"):
+            raise ValueError(f"unknown pool backend {backend!r}")
+        self.schedule = {w: list(o) for w, o in schedule.items()}
+        self.backend = backend
+
+    def run(self, fn: Callable, parts: Sequence
+            ) -> tuple[dict[int, object], dict[int, float], float, str]:
+        n_parts = len(parts)
+        workers = [(w, [p for p in owned if p < n_parts])
+                   for w, owned in sorted(self.schedule.items())]
+        workers = [(w, owned) for w, owned in workers if owned]
+        backend = self.backend
+        if backend == "auto":
+            first = workers[0][1][0] if workers else None
+            backend = (pick_backend(fn, parts[first])
+                       if first is not None else "thread")
+        t0 = time.perf_counter()
+        results: dict[int, object] = {}
+        part_time: dict[int, float] = {}
+        if backend == "sequential" or len(workers) <= 1:
+            # <=1 alive worker: no pool exists, report what actually ran
+            for _w, owned in workers:
+                for pid, res, dt in _drain(fn, owned, parts):
+                    results[pid] = res
+                    part_time[pid] = dt
+            return results, part_time, time.perf_counter() - t0, "sequential"
+        pool_cls = (ProcessPoolExecutor if backend == "process"
+                    else ThreadPoolExecutor)
+        kw = {}
+        if backend == "process":
+            import multiprocessing as mp
+            kw["mp_context"] = mp.get_context("spawn")
+        with pool_cls(max_workers=len(workers), **kw) as pool:
+            futs = {pool.submit(_drain, fn, owned, parts): w
+                    for w, owned in workers}
+            for fut in futs:
+                for pid, res, dt in fut.result():
+                    results[pid] = res
+                    part_time[pid] = dt
+        return results, part_time, time.perf_counter() - t0, backend

@@ -20,7 +20,6 @@ Two granularities of parallelism, matching the paper's evaluation setup:
 """
 from __future__ import annotations
 
-import time
 from typing import Iterator
 
 import jax
@@ -33,9 +32,11 @@ from ..core.plan import JoinPlan, partition_first_level
 from ..core.query import Query
 from ..core.vlftj import VLFTJ, _expand_level
 from ..train.stragglers import reassign_shards
+from .pool import WorkerPool
 
 
-def spmd_join_step(mesh, level_kw: dict, axis_names=None):
+def spmd_join_step(mesh, level_kw: dict, axis_names=None,
+                   plan: JoinPlan | None = None):
     """Build a sharded expansion-level counter over ``mesh``.
 
     ``level_kw`` holds the static kernel arguments of
@@ -44,11 +45,22 @@ def spmd_join_step(mesh, level_kw: dict, axis_names=None):
     the global weighted count: CSR replicated, frontier/mult row-sharded
     over every mesh axis in ``axis_names`` (default: all axes — a join
     has no MXU work for a model axis, but its HBM bandwidth is real, see
-    ``configs/wcoj.py``).  Frontier rows must divide the shard count;
-    callers pad and zero the padding's ``mult``, which the kernel's
-    ``counts * mult`` weighting nullifies.
+    ``configs/wcoj.py``).
+
+    Frontiers of any length are accepted: the wrapper pads rows to the
+    shard-count multiple and zeroes the padding's ``mult`` itself (the
+    kernel's ``counts * mult`` weighting nullifies padded rows) — callers
+    used to pre-pad by hand, and a wrong hand-zeroed ``mult`` silently
+    miscounted.  When ``plan`` carries a
+    :attr:`~repro.core.plan.JoinPlan.level_callback`
+    (``dist.rebalance.FrontierRebalancer``), the callback runs on the
+    host frontier first, so a skew-triggered re-deal can reorder rows
+    into cost-balanced device blocks before the sharded dispatch.
     """
     axes = tuple(mesh.axis_names) if axis_names is None else tuple(axis_names)
+    n_shards = 1
+    for a in axes:
+        n_shards *= int(mesh.shape[a])
     kw = dict(level_kw)
     kw.setdefault("count_only", True)
 
@@ -58,10 +70,36 @@ def spmd_join_step(mesh, level_kw: dict, axis_names=None):
                                row_valid, **kw)
         return jax.lax.psum(counts.sum(), axes)
 
-    return jax.jit(jax.shard_map(
+    jitted = jax.jit(jax.shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), P(), P(axes), P(axes)),
         out_specs=P(), check_vma=False))
+
+    callback = getattr(plan, "level_callback", None)
+
+    def step(indptr, indices, frontier, mult):
+        if callback is not None:
+            fr, ml = np.asarray(frontier), np.asarray(mult)
+            # callback convention (VLFTJ._run): `level` is the level
+            # just expanded, so its frontier has level+1 bound columns
+            # and the callback prices levels[level+1] — the level this
+            # step is about to dispatch
+            upd = callback(fr.shape[1] - 1, fr, ml)
+            if upd is not None:
+                frontier, mult = upd
+        rows = int(frontier.shape[0])
+        pad = (-rows) % n_shards
+        if pad:
+            fr = np.zeros((rows + pad, frontier.shape[1]), dtype=np.int32)
+            fr[:rows] = np.asarray(frontier)
+            ml = np.zeros(rows + pad, dtype=np.int64)
+            ml[:rows] = np.asarray(mult)
+            frontier, mult = fr, ml
+        return jitted(indptr, indices, jnp.asarray(frontier),
+                      jnp.asarray(mult))
+
+    step.n_shards = n_shards
+    return step
 
 
 def spmd_spmv_step(mesh, n_nodes: int, axis_names=None):
@@ -95,9 +133,14 @@ class PartitionedJoin:
     executor.  Parts are dealt to workers statically (part ``p`` to
     worker ``p % n_workers``; with ``dead`` workers, survivors pick up
     the orphaned parts via the same deterministic re-deal the training
-    loop uses).  Execution here is sequential per-process — the point is
-    the partition/schedule layer, whose ``stats`` expose the makespan a
-    real worker pool would see.
+    loop uses) and execute on a real concurrent pool
+    (:class:`~repro.dist.pool.WorkerPool`) — one worker per alive
+    schedule entry, each draining its owned parts in schedule order.
+    ``backend='auto'`` selects process vs thread by payload picklability;
+    the seeded-count task closes over the jitted executor, so it lands on
+    threads, where the XLA compute releases the GIL and the jit cache is
+    shared.  ``backend='sequential'`` restores the old single-thread walk
+    (the equality baseline in the tests).
 
     ``stats`` after :meth:`count`:
 
@@ -107,12 +150,16 @@ class PartitionedJoin:
     * ``worker_time`` — per-worker summed part time (len ``n_workers``;
       dead workers stay at 0.0);
     * ``makespan`` — max worker time, ``<= total_time`` always;
-    * ``total_time`` — summed part time (single-worker equivalent).
+    * ``total_time`` — summed part time (single-worker equivalent);
+    * ``backend`` / ``wall_time`` — what the pool actually ran on, and
+      the concurrent wall-clock (incl. pool overhead; compare with
+      ``makespan``, which aggregates pure part seconds).
     """
 
     def __init__(self, query: Query, gdb: GraphDB, n_workers: int = 4,
                  granularity: int = 2, plan: JoinPlan | None = None,
-                 dead: frozenset[int] | set[int] = frozenset(), **vlftj_kw):
+                 dead: frozenset[int] | set[int] = frozenset(),
+                 backend: str = "auto", **vlftj_kw):
         if n_workers < 1 or granularity < 1:
             raise ValueError("n_workers and granularity must be >= 1")
         self.executor = VLFTJ(query, gdb, plan=plan, **vlftj_kw)
@@ -125,23 +172,32 @@ class PartitionedJoin:
         self.parts = partition_first_level(
             self.executor.join_plan, seeds, gdb.csr.degrees, self.n_parts)
         self.schedule = reassign_shards(n_workers, set(dead), granularity)
+        self.backend = backend
         self.stats: dict = {
             "parts": self.n_parts,
             "part_sizes": [int(p.shape[0]) for p in self.parts],
         }
 
+    def _count_part(self, seeds: np.ndarray) -> int:
+        return self.executor.seeded_count(
+            seeds.astype(np.int32), np.ones(seeds.shape[0], dtype=np.int64))
+
     def count(self) -> int:
+        # warm the jitted level kernels once before fanning out: the
+        # first part otherwise compiles while every other worker blocks
+        # on the same compile lock, charging compilation to one part's
+        # time and skewing the makespan accounting
+        if self.parts and self.backend != "sequential":
+            warm = max(self.parts, key=lambda p: p.shape[0])
+            self._count_part(warm[:1])
+        pool = WorkerPool(self.schedule, backend=self.backend)
+        results, ptime, wall, backend = pool.run(self._count_part,
+                                                 self.parts)
         part_time = np.zeros(self.n_parts)
         part_counts = np.zeros(self.n_parts, dtype=np.int64)
-        total = 0
-        for pid, seeds in enumerate(self.parts):
-            t0 = time.perf_counter()
-            c = self.executor.seeded_count(
-                seeds.astype(np.int32),
-                np.ones(seeds.shape[0], dtype=np.int64))
-            part_time[pid] = time.perf_counter() - t0
+        for pid, c in results.items():
             part_counts[pid] = c
-            total += c
+            part_time[pid] = ptime[pid]
         worker_time = [0.0] * self.n_workers
         for worker, owned in self.schedule.items():
             worker_time[worker] = float(part_time[owned].sum())
@@ -151,8 +207,10 @@ class PartitionedJoin:
             "worker_time": worker_time,
             "makespan": max(worker_time),
             "total_time": float(part_time.sum()),
+            "backend": backend,
+            "wall_time": wall,
         })
-        return int(total)
+        return int(part_counts.sum())
 
     def pages(self, page_rows: int = 1024) -> Iterator[np.ndarray]:
         """Stream the join's output as fixed-size pages in global

@@ -1,10 +1,11 @@
 from .csr import CSRGraph
-from .generators import barabasi_albert, erdos_renyi, powerlaw_cluster, SNAP_LIKE
+from .generators import (barabasi_albert, erdos_renyi, powerlaw_cluster,
+                         zipf_graph, SNAP_LIKE)
 from .io import load_edgelist, save_edgelist
 from .sampling import node_sample, NeighborSampler
 
 __all__ = [
     "CSRGraph", "barabasi_albert", "erdos_renyi", "powerlaw_cluster",
-    "SNAP_LIKE", "load_edgelist", "save_edgelist", "node_sample",
-    "NeighborSampler",
+    "zipf_graph", "SNAP_LIKE", "load_edgelist", "save_edgelist",
+    "node_sample", "NeighborSampler",
 ]

@@ -75,6 +75,22 @@ def powerlaw_cluster(n: int, m_per_node: int, tri_p: float = 0.5,
     return g
 
 
+def zipf_graph(n: int, m: int, alpha: float = 1.4,
+               seed: int = 0) -> CSRGraph:
+    """Edges whose endpoints follow a Zipf popularity law — a handful of
+    hubs own most of the adjacency mass.  The skew workload for the
+    distributed layer: a static seed deal balances fine, but frontier
+    rows that *reach* a hub mid-join explode on whichever shard holds
+    them (``dist/rebalance.py``)."""
+    rng = np.random.default_rng(seed)
+    weights = np.arange(1, n + 1, dtype=np.float64) ** -alpha
+    p = weights / weights.sum()
+    src = rng.choice(n, size=m, p=p)
+    dst = rng.choice(n, size=m, p=p)
+    keep = src != dst
+    return CSRGraph.from_edges(src[keep], dst[keep], n_nodes=n)
+
+
 #: name -> (generator, kwargs) scaled like the paper's SNAP datasets.
 #: Edge counts are undirected, as in §5.1's table.
 SNAP_LIKE: dict[str, dict] = {

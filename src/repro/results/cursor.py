@@ -5,23 +5,29 @@ cross-product of the final GAO level — the one thing the counting path
 (Idea 8) carefully avoids.  :class:`ResultCursor` keeps that property
 for enumeration: it materializes only the *penultimate* frontier, sorts
 it lexicographically once, then re-enters the final VLFTJ level
-(``VLFTJ.last_level_extensions``) one small frontier chunk at a time,
+(``VLFTJ.last_level_extensions``) one frontier chunk at a time,
 flattening each chunk with :func:`repro.kernels.segment_outer
 .segment_expand` and handing out pages of ``page_rows`` rows.
 
-Memory bound: the expansion chunk is sized ``cf = max(1,
-page_rows // width)`` frontier rows, so one chunk contributes at most
-``cf * width <= max(width, page_rows)`` buffered rows and pulling stops
-as soon as a page is covered.  The tail buffer therefore never exceeds
-``page_rows + max(width, page_rows)`` rows (``width`` = the executor's
-padded candidate-tile width, a data constant) — tracked in
-``stats['peak_buffer_rows']`` and asserted in the tests.  A *dense*
-final level (no bound edge neighbor — rare; GAO choice avoids it) has
-domain-sized fanout instead, so it streams one frontier row at a time
-with its extension run sliced to the page size, keeping the same bound.  Concatenating
-every page reproduces ``VLFTJ.enumerate`` exactly: the frontier is
-lex-sorted, per-row extensions ascend, so pages arrive in global
-lexicographic order.
+Expansion chunks are sized by *measured* fanout: a first counting pass
+(``VLFTJ.last_level_counts`` — the cheap Idea-8 path, run at the
+executor's full chunk width) yields per-row extension counts, and chunk
+boundaries are cut where cumulative counts cross ``page_rows``.  One
+chunk therefore contributes at most ``max(width, page_rows)`` buffered
+rows (a single row can emit up to ``width``), and pulling stops as soon
+as a page is covered, so the tail buffer never exceeds ``page_rows +
+max(width, page_rows)`` rows (``width`` = the executor's padded
+candidate-tile width, a data constant) — tracked in
+``stats['peak_buffer_rows']`` and asserted in the tests.  Both passes
+pad to fixed geometries, so the executor's AOT-compiled final-level
+cache (``VLFTJ._final_level_call``) serves every page with two compiles
+total — no per-page jit dispatch, no re-trace.  A *dense* final level
+(no bound edge neighbor — rare; GAO choice avoids it) has domain-sized
+fanout instead, so it streams one frontier row at a time with its
+extension run sliced to the page size, keeping the same bound.
+Concatenating every page reproduces ``VLFTJ.enumerate`` exactly: the
+frontier is lex-sorted, per-row extensions ascend, so pages arrive in
+global lexicographic order.
 
 ``from_rows`` / ``from_blocks`` wrap already-materialized output (the
 non-VLFTJ engines, the dist layer's merged part streams) in the same
@@ -53,7 +59,7 @@ class ResultCursor:
             raise ValueError("page_rows must be >= 1")
         self.vars = executor.gao
         self.page_rows = page_rows
-        self.stats = {"pages": 0, "rows": 0, "chunks": 0,
+        self.stats = {"pages": 0, "rows": 0, "chunks": 0, "count_chunks": 0,
                       "peak_buffer_rows": 0, "frontier_rows": 0}
         self._k = len(executor.gao)
         self._buf: list[np.ndarray] = []
@@ -72,7 +78,7 @@ class ResultCursor:
         cur = cls.__new__(cls)
         cur.vars = tuple(columns)
         cur.page_rows = page_rows
-        cur.stats = {"pages": 0, "rows": 0, "chunks": 0,
+        cur.stats = {"pages": 0, "rows": 0, "chunks": 0, "count_chunks": 0,
                      "peak_buffer_rows": 0, "frontier_rows": 0}
         cur._k = len(cur.vars)
         cur._buf = []
@@ -126,19 +132,52 @@ class ResultCursor:
                         frontier[i:i + 1],
                         np.array([part.shape[0]], dtype=np.int64), part)
             return
-        # chunk so one expansion never exceeds ~page_rows buffered rows
-        cf = min(max(1, self.page_rows // max(1, ex.width)), ex.chunk_rows)
-        for s in range(0, frontier.shape[0], cf):
-            chunk = frontier[s:s + cf]
-            real = chunk.shape[0]
-            if real < cf:
-                chunk = np.pad(chunk, ((0, cf - real), (0, 0)))
-            valid = np.zeros(cf, dtype=bool)
-            valid[:real] = True
-            counts, vals = ex.last_level_extensions(
-                chunk.astype(np.int32), valid)
-            self.stats["chunks"] += 1
-            yield segment_expand(chunk[:real], counts[:real], vals)
+        # Two interleaved passes, both under the buffer bound.  Per
+        # counting window (the executor's full chunk width — the cheap
+        # Idea-8 path), per-row final-level counts are measured and
+        # expansion chunks are cut where cumulative counts cross
+        # page_rows (one overfull row may emit up to `width`).  Sizing
+        # chunks by measured fanout instead of the worst-case tile
+        # width is what keeps the dispatch count at ~output/page_rows
+        # rather than frontier/(page_rows/width) — the ~10x small-page
+        # throughput penalty this replaces.  Counting stays lazy, one
+        # window ahead of the pages actually pulled, so a client that
+        # stops after the first page pays one counting dispatch, not
+        # the whole frontier.  Every dispatch is padded to a fixed
+        # geometry, so the executor's AOT-compiled final-level cache
+        # serves all pages with two compiles total.
+        F = frontier.shape[0]
+        cstep = ex.chunk_rows
+        cap = max(1, min(ex.chunk_rows, self.page_rows))
+        for w0 in range(0, F, cstep):
+            wreal = min(cstep, F - w0)
+            window = frontier[w0:w0 + wreal]
+            wpad = (window if wreal == cstep
+                    else np.pad(window, ((0, cstep - wreal), (0, 0))))
+            wvalid = np.zeros(cstep, dtype=bool)
+            wvalid[:wreal] = True
+            counts = ex.last_level_counts(
+                wpad.astype(np.int32), wvalid)[:wreal]
+            self.stats["count_chunks"] += 1
+            cum = np.concatenate([[0], np.cumsum(counts)])
+            i = 0
+            while i < wreal:
+                j = int(np.searchsorted(cum, cum[i] + self.page_rows,
+                                        side="right")) - 1
+                j = min(max(j, i + 1), i + cap, wreal)
+                real = j - i
+                chunk = window[i:j]
+                if real < cap:
+                    chunk = np.pad(chunk, ((0, cap - real), (0, 0)))
+                valid = np.zeros(cap, dtype=bool)
+                valid[:real] = True
+                ccounts, vals = ex.last_level_extensions(
+                    chunk.astype(np.int32), valid)
+                self.stats["chunks"] += 1
+                if vals.shape[0]:
+                    yield segment_expand(chunk[:real], ccounts[:real],
+                                         vals)
+                i = j
 
     # -- paging --------------------------------------------------------------
     def take(self, n: int | None = None) -> np.ndarray:

@@ -98,13 +98,23 @@ class QueryServer:
         # open enumeration cursors: token -> (cursor, engine label, plan),
         # LRU-capped at max_open_cursors so abandoned paginations (a
         # client that never follows next_cursor) cannot accumulate
-        # frontier arrays for the life of the server — evicted tokens
-        # behave like exhausted ones (ValueError on resume)
+        # frontier arrays for the life of the server.  _closed remembers
+        # *why* a token is gone ('evicted' vs 'exhausted') so the resume
+        # error can tell a client whether restarting pagination would
+        # help — an evicted stream is restartable, an exhausted one was
+        # fully delivered (bounded: tokens are monotonic, keep the tail)
         self.page_rows = page_rows
         self.max_open_cursors = max_open_cursors
         self._cursors: "OrderedDict[str, tuple[ResultCursor, str, JoinPlan]]" \
             = OrderedDict()
+        self._closed: "OrderedDict[str, str]" = OrderedDict()
         self._cursor_seq = 0
+
+    def _close_cursor(self, token: str, reason: str) -> None:
+        self._cursors.pop(token, None)
+        self._closed[token] = reason
+        while len(self._closed) > 4 * self.max_open_cursors:
+            self._closed.popitem(last=False)
 
     def _routes_to_dist(self, plan: JoinPlan, gdb: GraphDB) -> bool:
         return (self.dist_edge_threshold is not None
@@ -191,14 +201,14 @@ class QueryServer:
                         else self.page_rows)
         if cur.exhausted:
             if token is not None:
-                self._cursors.pop(token, None)
+                self._close_cursor(token, "exhausted")
             token = None
         elif token is None:
             self._cursor_seq += 1
             token = f"cur-{self._cursor_seq}"
             self._cursors[token] = (cur, label, plan)
             while len(self._cursors) > self.max_open_cursors:
-                self._cursors.popitem(last=False)
+                self._close_cursor(next(iter(self._cursors)), "evicted")
         else:
             self._cursors.move_to_end(token)
         return QueryResult(req, int(page.shape[0]), label,
@@ -211,8 +221,19 @@ class QueryServer:
             try:
                 cur, label, plan = self._cursors[req.cursor]
             except KeyError:
-                raise ValueError(f"unknown or exhausted cursor "
-                                 f"{req.cursor!r}") from None
+                reason = self._closed.get(req.cursor)
+                if reason == "evicted":
+                    raise ValueError(
+                        f"evicted cursor {req.cursor!r}: the server keeps "
+                        f"at most {self.max_open_cursors} open cursors and "
+                        "this one aged out — restart pagination from the "
+                        "first page") from None
+                if reason == "exhausted":
+                    raise ValueError(
+                        f"exhausted cursor {req.cursor!r}: the result set "
+                        "was fully delivered; do not restart") from None
+                raise ValueError(
+                    f"unknown cursor {req.cursor!r}") from None
             return self._rows_result(req, cur, label, plan, True,
                                      req.cursor, t0)
         sel = req.selectivity or self.default_selectivity

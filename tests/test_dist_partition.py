@@ -1,11 +1,16 @@
-"""PartitionedJoin edge cases, partition/schedule invariants, and the
-QueryServer -> dist routing path (all single-device host-side)."""
+"""PartitionedJoin edge cases, partition/schedule invariants, the real
+worker pool, and the QueryServer -> dist routing path (all single-device
+host-side)."""
+import math
+
+import jax
 import numpy as np
 import pytest
 
 from repro.core import GraphDB, count, get_query
-from repro.core.plan import stripe_partition
-from repro.dist.sharded_join import PartitionedJoin
+from repro.core.plan import executor_geometry, stripe_partition
+from repro.dist.pool import WorkerPool, pick_backend
+from repro.dist.sharded_join import PartitionedJoin, spmd_join_step
 from repro.graphs import node_sample, powerlaw_cluster
 from repro.serve import QueryRequest, QueryServer
 
@@ -92,6 +97,78 @@ def test_dead_worker_redeal_covers_all_parts(gdb):
     assert owned == list(range(8))
     assert 1 not in pj.schedule
     assert pj.stats["worker_time"][1] == 0.0
+
+
+def test_pool_equals_sequential_partitioned_join(gdb):
+    """The satellite property: the concurrent pool computes exactly what
+    the old sequential walk did, part for part."""
+    for qname in ("3-clique", "3-path"):
+        seq = PartitionedJoin(get_query(qname), gdb, n_workers=3,
+                              granularity=2, backend="sequential")
+        pool = PartitionedJoin(get_query(qname), gdb, n_workers=3,
+                               granularity=2, backend="thread")
+        assert seq.count() == pool.count()
+        assert seq.stats["part_counts"] == pool.stats["part_counts"]
+        assert seq.stats["backend"] == "sequential"
+        assert pool.stats["backend"] == "thread"
+        assert pool.stats["wall_time"] > 0
+
+
+def test_auto_backend_routes_device_payload_to_threads(gdb):
+    pj = PartitionedJoin(get_query("3-clique"), gdb, n_workers=2,
+                         granularity=2)
+    ref = count(get_query("3-clique"), gdb, engine="vlftj")
+    assert pj.count() == ref
+    # the join task closes over jitted/device state: never a process
+    assert pj.stats["backend"] == "thread"
+    assert pick_backend(pj._count_part, pj.parts[0]) == "thread"
+    # a pure-python payload may cross a process boundary
+    assert pick_backend(math.factorial, 5) == "process"
+
+
+def test_worker_pool_process_backend_roundtrip():
+    sched = {0: [0, 2], 1: [1, 3]}
+    res, ptime, wall, backend = WorkerPool(sched, backend="auto").run(
+        math.factorial, [5, 6, 7, 8])
+    assert backend == "process"
+    assert res == {0: 120, 1: 720, 2: 5040, 3: 40320}
+    assert set(ptime) == {0, 1, 2, 3} and wall > 0
+
+
+def test_pool_respects_dead_worker_schedule(gdb):
+    ref = count(get_query("3-path"), gdb, engine="vlftj")
+    pj = PartitionedJoin(get_query("3-path"), gdb, n_workers=4,
+                         granularity=2, dead={2}, backend="thread")
+    assert pj.count() == ref
+    assert pj.stats["worker_time"][2] == 0.0
+    assert 2 not in pj.schedule
+
+
+def test_spmd_join_step_pads_non_divisible_frontier(gdb):
+    """Regression (satellite): callers no longer pre-pad the frontier to
+    the shard multiple or hand-zero the padding's mult."""
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    g = gdb.csr
+    ea = g.edge_array()
+    fr = ea[ea[:, 0] < ea[:, 1]].astype(np.int32)
+    # odd length: under >1 device the wrapper must pad internally
+    if fr.shape[0] % 2 == 0:
+        fr = fr[:-1]
+    width, _ = executor_geometry(gdb.max_degree)
+    kw = dict(probe_cols=(0, 1), n_unary=0, lower_cols=(1,), upper_cols=(),
+              width=width, n_iter=gdb.bsearch_iters, needs_degree=False)
+    step = spmd_join_step(mesh, kw)
+    mult = np.ones(fr.shape[0], np.int64)
+    got = int(step(gdb.dev("indptr"), gdb.dev("indices"), fr, mult))
+    # oracle: per-edge sorted-intersection triangle count over fr
+    ind, ptr = g.indices, g.indptr
+    ref = 0
+    for a, b in fr:
+        inter = np.intersect1d(ind[ptr[a]:ptr[a + 1]],
+                               ind[ptr[b]:ptr[b + 1]], assume_unique=True)
+        ref += int((inter > b).sum())
+    assert got == ref
 
 
 def test_query_server_routes_large_graphs_to_partitioned():

@@ -211,6 +211,31 @@ def test_server_cursor_registry_is_capped(gdb300):
         QueryRequest("3-clique", cursor=tokens[-1])).rows.shape[0] == 8
 
 
+def test_server_distinguishes_evicted_vs_exhausted_cursor(gdb300):
+    """Clients need to know whether to restart pagination: an evicted
+    stream is restartable, an exhausted one was fully delivered."""
+    srv = QueryServer(gdb300.csr, page_rows=8, max_open_cursors=2)
+    # open three cursors: the first (oldest open) is evicted at the cap
+    tokens = [srv.execute(QueryRequest("3-clique", selectivity=8, seed=0,
+                                       engine="vlftj", limit=8)).next_cursor
+              for _ in range(3)]
+    assert all(t is not None for t in tokens)
+    assert list(srv._cursors) == tokens[1:]
+    with pytest.raises(ValueError, match="evicted.*restart"):
+        srv.execute(QueryRequest("3-clique", cursor=tokens[0]))
+    # drain the newest to exhaustion -> a different, do-not-restart error
+    tok = tokens[-1]
+    while tok is not None:
+        last = tok
+        tok = srv.execute(
+            QueryRequest("3-clique", cursor=tok, limit=512)).next_cursor
+    with pytest.raises(ValueError, match="exhausted.*not restart"):
+        srv.execute(QueryRequest("3-clique", cursor=last))
+    # a token the server never issued is neither
+    with pytest.raises(ValueError, match="unknown"):
+        srv.execute(QueryRequest("3-clique", cursor="cur-999"))
+
+
 def test_cursor_take_and_exhaustion(gdb):
     q = get_query("3-clique")
     full = engine_mod.enumerate(q, gdb, engine="vlftj", mode="flat")
