@@ -1,0 +1,144 @@
+"""Adjacency-layout crossover benchmark: degree-adaptive bitset vs array.
+
+Measures the hybrid layout stack (``graphs/layout.py`` +
+``core.device_graph.HybridGraphDB`` + the vectorized engine's bitset
+check path) against the array-only baseline on the same degree-sorted
+graph, so the timing gap isolates the *representation* choice:
+
+* ``triangle/zipf<alpha>/{array,hybrid}`` — triangle closure on Zipf
+  graphs (skew 1.5 / 2.0 / 2.5).  The final GAO level checks candidates
+  against two bound sources; on hub-hub frontier rows the hybrid plan
+  replaces ``log2(maxdeg)+1`` binary-search gather rounds with one
+  bitset word gather + bit test.  The derived field carries the
+  speedup — the acceptance bar is >= 2x on the hub-heavy shapes
+  (alpha <= 2.0; at 2.5 the quick graph's triangle count is tiny and
+  the measurement is dispatch-overhead noise).
+* ``path3/zipf<alpha>/{array,hybrid}`` — the 3-path control: no GAO
+  level has two bound edge sources, so the planner keeps every level
+  ``array`` and the two runs must time the same (ratio ~1 = the hybrid
+  machinery costs nothing when it cannot help).
+* ``triangle/uniform/{array,hybrid}`` — Erdos-Renyi control: no skew,
+  but every vertex clears the degree floor so membership checks all go
+  through the bitset table; the bar is ratio <= 1 (unregressed).
+* ``build/zipf<alpha>`` — one-time layout build cost (degree-sort
+  renumbering + bitset packing), to show it amortizes.
+
+Counts are verified equal between the array and hybrid runs (both run
+on the *same* renumbered HybridGraphDB; only ``level_layouts`` differs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core import HybridGraphDB, GraphStats, get_query
+from repro.core.planner import plan_query
+from repro.core.vlftj import VLFTJ
+from repro.graphs import erdos_renyi, node_sample, zipf_graph
+
+from .common import Row, timed
+
+ALPHAS = (1.5, 2.0, 2.5)
+
+
+def _graph(alpha: float | None, quick: bool, seed: int = 0):
+    n, m = (2000, 20000) if quick else (8000, 120000)
+    if alpha is None:
+        return erdos_renyi(n, m, seed=seed)
+    return zipf_graph(n, m, alpha=alpha, seed=seed)
+
+
+def _hdb(g, qname: str) -> HybridGraphDB:
+    unary = None
+    if qname == "3-path":  # path endpoints carry sample predicates
+        unary = {f"v{i}": node_sample(g.n_nodes, 8.0, seed=17 * i + 1)
+                 for i in (1, 2)}
+    return HybridGraphDB.build(g, unary)
+
+
+def _pair_rows(tag: str, qname: str, g, repeats: int = 3) -> list[Row]:
+    """Time the same plan with layouts forced to array vs as chosen."""
+    q = get_query(qname)
+    hdb = _hdb(g, qname)
+    plan = plan_query(q, GraphStats.of(hdb), engine="vlftj")
+    plan_arr = dataclasses.replace(
+        plan, level_layouts=("array",) * len(plan.level_layouts))
+    VLFTJ(q, hdb, plan=plan_arr).count()   # warm: compile cache
+    VLFTJ(q, hdb, plan=plan).count()
+    c_arr, us_arr = timed(lambda: VLFTJ(q, hdb, plan=plan_arr).count(),
+                          repeats=repeats)
+    eng = VLFTJ(q, hdb, plan=plan)
+    c_hyb, us_hyb = timed(eng.count, repeats=repeats)
+    assert c_arr == c_hyb, (tag, c_arr, c_hyb)
+    eng.stats["bitset_rows"] = 0
+    eng.count()  # one instrumented pass for the bitset row count
+    speed = us_arr / max(us_hyb, 1e-9)
+    return [
+        Row(f"{tag}/array", us_arr, f"count={c_arr}"),
+        Row(f"{tag}/hybrid", us_hyb,
+            f"count={c_hyb};hubs={hdb.n_hubs};"
+            f"bitset_rows={eng.stats['bitset_rows']};"
+            f"layouts={'-'.join(plan.level_layouts)};"
+            f"speedup={speed:.2f}"),
+    ]
+
+
+def _build_rows(quick: bool) -> list[Row]:
+    rows = []
+    for alpha in ALPHAS:
+        g = _graph(alpha, quick)
+        HybridGraphDB.build(g)
+        lay, us = timed(lambda: HybridGraphDB.build(g).layout, repeats=3)
+        rows.append(Row(f"build/zipf{alpha}", us,
+                        f"hubs={lay.n_hubs};words={lay.n_words};"
+                        f"min_degree={lay.min_degree}"))
+    return rows
+
+
+def run(quick: bool = True) -> list[Row]:
+    rows: list[Row] = []
+    for alpha in ALPHAS:
+        rows += _pair_rows(f"triangle/zipf{alpha}", "3-clique",
+                           _graph(alpha, quick))
+    for alpha in ALPHAS:
+        rows += _pair_rows(f"path3/zipf{alpha}", "3-path",
+                           _graph(alpha, quick))
+    rows += _pair_rows("triangle/uniform", "3-clique", _graph(None, quick))
+    rows += _build_rows(quick)
+    return rows
+
+
+def record_baseline(path: str | None = None, quick: bool = True) -> dict:
+    """Write BENCH_layout.json: the array-vs-hybrid crossover table."""
+    rows = run(quick=quick)
+    payload = {
+        "bench": "layout",
+        "quick": quick,
+        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 2),
+                  "derived": r.derived} for r in rows],
+    }
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_layout.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="degree-adaptive layout crossover benchmark")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the BENCH json here instead of CSV rows")
+    a = ap.parse_args()
+    if a.out:
+        payload = record_baseline(path=a.out, quick=a.quick)
+        print(f"wrote {a.out} ({len(payload['rows'])} rows)")
+    else:
+        for row in run(quick=a.quick):
+            print(row.csv())

@@ -15,7 +15,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: cyclic,acyclic,ideas,gao,"
-                         "granularity,scaling,agm,planner,dist,enumerate")
+                         "granularity,scaling,agm,planner,dist,"
+                         "enumerate,layout")
     args = ap.parse_args()
     quick = not args.full
 
@@ -31,6 +32,7 @@ def main() -> None:
         "planner": "bench_planner",        # plan cache + cost model
         "dist": "bench_dist",              # sharded join + compression
         "enumerate": "bench_enumerate",    # flat/chunked/factorized rows
+        "layout": "bench_layout",          # bitset/array crossover
     }
     chosen = (args.only.split(",") if args.only else list(modules))
     unknown = [k for k in chosen if k not in modules]

@@ -1,6 +1,6 @@
 from .agm import agm_bound, fractional_edge_cover
 from .binary_join import BinaryJoin, JoinBlowup, binary_join_count
-from .device_graph import GraphDB
+from .device_graph import GraphDB, HybridGraphDB
 from .engine import ENGINES, count, execute, pick_engine
 from .gao import choose_gao
 from .hybrid import HybridJoin, hybrid_count
@@ -10,7 +10,8 @@ from .minesweeper_ref import Minesweeper, minesweeper_count
 from .plan import (GraphStats, HybridPlan, JoinPlan, LevelPlan,
                    compile_levels, partition_first_level, stripe_partition)
 from .planner import (PlanCache, candidate_gaos, candidate_plans,
-                      decompose_hybrid, estimate_vlftj_cost, plan_query)
+                      choose_level_layouts, decompose_hybrid,
+                      estimate_vlftj_cost, plan_query)
 from .query import (Atom, LessThan, PAPER_QUERIES, Query, clique, comb,
                     cycle, get_query, lollipop, parse, path, tree)
 from .relation import Database, Relation
@@ -19,14 +20,16 @@ from .yannakakis import CountingYannakakis, yannakakis_count
 
 __all__ = [
     "agm_bound", "fractional_edge_cover", "BinaryJoin", "JoinBlowup",
-    "binary_join_count", "GraphDB", "ENGINES", "count", "execute",
+    "binary_join_count", "GraphDB", "HybridGraphDB", "ENGINES", "count",
+    "execute",
     "pick_engine", "choose_gao", "HybridJoin", "hybrid_count",
     "Hypergraph", "all_neos", "is_beta_acyclic", "is_neo", "LFTJ",
     "lftj_count", "Minesweeper", "minesweeper_count", "GraphStats",
     "HybridPlan", "JoinPlan", "LevelPlan", "compile_levels",
     "partition_first_level", "stripe_partition", "PlanCache",
-    "candidate_gaos", "candidate_plans", "decompose_hybrid",
-    "estimate_vlftj_cost", "plan_query", "Atom", "LessThan",
+    "candidate_gaos", "candidate_plans", "choose_level_layouts",
+    "decompose_hybrid", "estimate_vlftj_cost", "plan_query", "Atom",
+    "LessThan",
     "PAPER_QUERIES", "Query", "clique", "comb", "cycle", "get_query",
     "lollipop", "parse", "path", "tree", "Database", "Relation", "VLFTJ",
     "vlftj_count", "CountingYannakakis", "yannakakis_count",

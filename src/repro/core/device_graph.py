@@ -3,6 +3,12 @@
 The edge relation lives as CSR (``indptr``/``indices``) int32 arrays; unary
 sample predicates live as dense boolean bitmaps over the node domain — a
 gather into a bitmap is the TPU-native membership probe for selective sets.
+
+:class:`HybridGraphDB` extends the base with the degree-adaptive layout
+stack (``graphs/layout.py``): vertices renumbered by descending degree,
+hub neighborhoods additionally packed as uint32 bitset rows, and per-vertex
+representation tags shipped to device so the vectorized engines can route
+membership checks to the O(1) bit-test path.
 """
 from __future__ import annotations
 
@@ -13,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graphs.csr import CSRGraph
+from ..graphs.layout import (HybridLayout, degree_sort_permutation,
+                             map_rows_back, renumber_csr)
 from .relation import Database, Relation
 
 
@@ -79,3 +87,82 @@ class GraphDB:
                  for name, r in db.relations.items()
                  if r.arity == 1}
         return cls(csr, unary)
+
+
+@dataclass
+class HybridGraphDB(GraphDB):
+    """A :class:`GraphDB` carrying the degree-adaptive hybrid layout.
+
+    The CSR is (by default) renumbered so hubs occupy the id prefix
+    ``[0, layout.n_hubs)``; ``layout`` additionally stores those hubs'
+    neighborhoods as uint32 bitset rows.  The sorted arrays remain
+    authoritative — every engine that works on a :class:`GraphDB` works
+    here unchanged.  Enumerated rows are in renumbered ids and map back
+    via :meth:`rows_to_original`.  Counts are renumbering-invariant for
+    filter-free queries and for ``LessThan`` chains that exactly quotient
+    a query automorphism (cliques); order filters that merely *slice* the
+    id space (e.g. the 4-cycle's ``a<b<c<d``) are evaluated in the
+    renumbered space, so compare engines on the same db, or pass
+    ``renumber=False`` to keep original ids.
+
+    Extra device keys: ``"bitset_words"`` — the (n_hubs, n_words) uint32
+    bitset matrix; ``"rep_tag"`` — per-vertex int32 representation tag
+    (bitset row index for hubs, -1 for array-only vertices).
+    """
+
+    layout: HybridLayout | None = None
+    order: np.ndarray | None = None        # new id -> old id
+    new_of_old: np.ndarray | None = None   # old id -> new id
+
+    @classmethod
+    def build(cls, csr: CSRGraph, unary: dict[str, np.ndarray] | None = None,
+              renumber: bool = True, **layout_kw) -> "HybridGraphDB":
+        """Renumber by descending degree, remap unary sets, pack hub
+        bitsets.  ``layout_kw`` forwards to :meth:`HybridLayout.build`
+        (``min_degree``, ``density``, ``word_budget``, ``max_hubs``)."""
+        unary = dict(unary or {})
+        if renumber:
+            order, inv = degree_sort_permutation(csr)
+            csr = renumber_csr(csr, inv)
+            unary = {name: np.sort(inv[np.asarray(ids, dtype=np.int64)])
+                     for name, ids in unary.items()}
+        else:
+            order = np.arange(csr.n_nodes, dtype=np.int64)
+            inv = order
+        layout = HybridLayout.build(csr, **layout_kw)
+        return cls(csr=csr, unary=unary, layout=layout, order=order,
+                   new_of_old=inv)
+
+    @classmethod
+    def from_gdb(cls, gdb: GraphDB, renumber: bool = True,
+                 **layout_kw) -> "HybridGraphDB":
+        return cls.build(gdb.csr, gdb.unary, renumber=renumber, **layout_kw)
+
+    @property
+    def n_hubs(self) -> int:
+        return self.layout.n_hubs if self.layout is not None else 0
+
+    def rows_to_original(self, rows: np.ndarray) -> np.ndarray:
+        """Map result rows (renumbered vertex ids) back to the original
+        id space — the renumbering round-trip for query results."""
+        return map_rows_back(rows, self.order)
+
+    def dev(self, key: str):
+        if key in self._dev:
+            return self._dev[key]
+        if key == "bitset_words":
+            lay = self.layout
+            if lay is None:
+                raise KeyError(key)
+            # keep at least one row so the device array is gatherable
+            w = lay.words if lay.n_hubs else np.zeros((1, lay.n_words),
+                                                      dtype=np.uint32)
+            v = jnp.asarray(w, dtype=jnp.uint32)
+        elif key == "rep_tag":
+            if self.layout is None:
+                raise KeyError(key)
+            v = jnp.asarray(self.layout.rep_tags(), dtype=jnp.int32)
+        else:
+            return super().dev(key)
+        self._dev[key] = v
+        return v

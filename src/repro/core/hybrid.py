@@ -64,11 +64,15 @@ class HybridJoin:
         # executions of a cached hybrid plan never re-enter the planner
         d = plan.decomposition
         if d is not None:
+            # the hybrid plan's gao IS the core gao, so its per-level
+            # layout choices carry over to the core executor plan
             self._core_plan = JoinPlan(query=d.core_query, engine="vlftj",
-                                       gao=d.core_gao)
+                                       gao=d.core_gao,
+                                       level_layouts=plan.level_layouts)
         elif plan.gao:
             self._core_plan = JoinPlan(query=query, engine="vlftj",
-                                       gao=plan.gao)
+                                       gao=plan.gao,
+                                       level_layouts=plan.level_layouts)
         else:
             self._core_plan = None
 

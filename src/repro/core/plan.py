@@ -158,12 +158,25 @@ class GraphStats:
     max_degree: int
     avg_degree: float
     unary_sizes: tuple[tuple[str, int], ...]  # sorted (name, |set|)
+    # hybrid-layout summary (zero on array-only GraphDBs): hub count,
+    # degree threshold, fraction of directed edges incident to a hub
+    # source (the probability a frontier's bound vertex is bitset-tagged),
+    # and the bitset row width in uint32 words
+    n_hubs: int = 0
+    hub_degree_threshold: int = 0
+    hub_edge_fraction: float = 0.0
+    bitset_words: int = 0
 
     @classmethod
     def of(cls, gdb) -> "GraphStats":
         csr = gdb.csr
         n = max(1, csr.n_nodes)
         n_edges = int(csr.indices.shape[0])
+        layout = getattr(gdb, "layout", None)
+        n_hubs = int(layout.n_hubs) if layout is not None else 0
+        hub_frac = 0.0
+        if n_hubs:
+            hub_frac = float(csr.degrees[:n_hubs].sum()) / max(1, n_edges)
         return cls(
             n_nodes=csr.n_nodes,
             n_edges=n_edges,
@@ -171,6 +184,11 @@ class GraphStats:
             avg_degree=n_edges / n,
             unary_sizes=tuple(sorted(
                 (name, int(len(ids))) for name, ids in gdb.unary.items())),
+            n_hubs=n_hubs,
+            hub_degree_threshold=(int(layout.min_degree)
+                                  if n_hubs else 0),
+            hub_edge_fraction=round(hub_frac, 6),
+            bitset_words=int(layout.n_words) if n_hubs else 0,
         )
 
     def unary_selectivity(self, name: str) -> float:
@@ -192,9 +210,15 @@ class GraphStats:
         return sizes
 
     def fingerprint(self) -> str:
-        """Stable short digest — the plan-cache invalidation token."""
+        """Stable short digest — the plan-cache invalidation token.
+
+        Includes the layout summary, so the same graph with and without
+        a hybrid bitset layout plans (and caches) separately."""
         payload = repr((self.n_nodes, self.n_edges, self.max_degree,
-                        round(self.avg_degree, 6), self.unary_sizes))
+                        round(self.avg_degree, 6), self.unary_sizes,
+                        self.n_hubs, self.hub_degree_threshold,
+                        round(self.hub_edge_fraction, 6),
+                        self.bitset_words))
         return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
 
@@ -241,6 +265,13 @@ class JoinPlan:
     agm_log2: float | None = None
     stats_fingerprint: str = ""
     output_mode: str = "count"
+    #: per-GAO-level adjacency representation chosen by the planner
+    #: ('array' | 'bitset' | 'mixed'), one entry per level; empty means
+    #: array-only.  'bitset' = nearly all membership checks expected on
+    #: hub (bitset-tagged) vertices, 'mixed' = the executor buckets rows
+    #: by the tags at runtime.  A tuple of strings, so plans stay
+    #: frozen/hashable.
+    level_layouts: tuple[str, ...] = ()
     level_callback: object = field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
@@ -269,5 +300,8 @@ class JoinPlan:
             parts.append(f"root={self.root}")
         if self.output_mode != "count":
             parts.append(f"out={self.output_mode}")
+        if any(m != "array" for m in self.level_layouts):
+            parts.append("layout=" + ",".join(
+                m[0] for m in self.level_layouts))
         parts.append(f"cost~2^{math.log2(max(self.est_cost, 1.0)):.1f}")
         return " ".join(parts)

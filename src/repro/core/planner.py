@@ -46,6 +46,33 @@ AUTO_ENGINES = ("yannakakis", "hybrid", "vlftj")
 # cost model
 # ---------------------------------------------------------------------------
 
+def choose_level_layouts(query: Query, gao: tuple[str, ...],
+                         stats: GraphStats) -> tuple[str, ...]:
+    """Per-GAO-level adjacency representation for the hybrid layout.
+
+    A level benefits from bitsets only where membership *checks* happen:
+    it has >= 2 bound edge sources (the probe source pays gathers either
+    way — candidate expansion needs the sorted array).  There the check
+    against a hub vertex is one word-gather + bit-test instead of
+    ``log2(deg)`` binary-search rounds, so with any hubs present the
+    bitset path is picked for the hub-tagged rows: ``'bitset'`` when the
+    adjacency mass is almost entirely hub-owned (the executor still
+    falls back row-wise), ``'mixed'`` otherwise, ``'array'`` when the
+    stats carry no layout.  Deterministic in ``(query, gao, stats)`` —
+    the same inputs the cost model prices, so plans stay cacheable.
+    """
+    levels = compile_levels(query, gao)
+    out = []
+    for lp in levels:
+        if stats.n_hubs == 0 or len(lp.edge_sources) < 2:
+            out.append("array")
+        elif stats.hub_edge_fraction >= 0.95:
+            out.append("bitset")
+        else:
+            out.append("mixed")
+    return tuple(out)
+
+
 def _cost_model(query: Query, gao: tuple[str, ...], stats: GraphStats,
                 seed_frontier: float | None = None,
                 ) -> tuple[float, tuple[float, ...], tuple[float, ...]]:
@@ -53,6 +80,7 @@ def _cost_model(query: Query, gao: tuple[str, ...], stats: GraphStats,
     where ``frontiers[i]`` estimates the frontier size *after* level i
     (``frontiers[-1]`` is the estimated output cardinality)."""
     levels = compile_levels(query, gao)
+    layouts = choose_level_layouts(query, gao, stats)
     n = max(1, stats.n_nodes)
     logd = math.log2(max(2, stats.max_degree))
     # the executor's padding defaults (shared with VLFTJ.__init__)
@@ -75,8 +103,16 @@ def _cost_model(query: Query, gao: tuple[str, ...], stats: GraphStats,
         survive = estimate_extension_degree(lp, stats)
         if lp.edge_sources:
             extra_checks = max(0, len(lp.edge_sources) - 1)
+            # per-check gather rounds: binary search pays ~log2(d); a
+            # hub-tagged check source pays one bitset word-gather.  The
+            # hub fraction of adjacency mass approximates how often a
+            # bound frontier vertex is a hub.
+            check_rounds = logd
+            if layouts[i] in ("bitset", "mixed"):
+                hf = stats.hub_edge_fraction
+                check_rounds = hf * 1.0 + (1.0 - hf) * logd
             padded = math.ceil(frontier / chunk_rows) * chunk_rows * width
-            work = padded * (1.0 + extra_checks * logd)
+            work = padded * (1.0 + extra_checks * check_rounds)
         else:
             # no bound edge neighbor: host cross product with the domain
             work = frontier * n * sel_unary
@@ -336,9 +372,13 @@ def _plan_vlftj(query: Query, stats: GraphStats,
     else:
         gao = tuple(gao)
         est_cost, level_costs = _safe_estimate(query, gao, stats)
+    try:
+        layouts = choose_level_layouts(query, gao, stats)
+    except ValueError:
+        layouts = ()        # non-graph atoms: executor stays array-only
     return JoinPlan(query=query, engine=engine, gao=gao,
                     est_cost=est_cost, level_costs=level_costs,
-                    agm_log2=agm,
+                    agm_log2=agm, level_layouts=layouts,
                     stats_fingerprint=stats.fingerprint())
 
 
@@ -374,6 +414,8 @@ def _plan_hybrid(query: Query, stats: GraphStats) -> JoinPlan | None:
                     est_cost=tree_cost + core_cost,
                     level_costs=level_costs,
                     agm_log2=_agm_log2(query, stats),
+                    level_layouts=choose_level_layouts(
+                        hp.core_query, hp.core_gao, stats),
                     stats_fingerprint=stats.fingerprint())
 
 

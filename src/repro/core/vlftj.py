@@ -54,11 +54,18 @@ def _expand_level(indptr, indices, bitmaps, frontier, mult,
                   lower_cols, upper_cols, width, n_iter, count_only,
                   needs_degree, unroll=False, check_mode="bsearch",
                   check_width=0, rotate_checks=False, summary=None,
-                  summary_stride=128, n_iter2=9):
+                  summary_stride=128, n_iter2=9, rep_tag=None,
+                  bitset_words=None):
     """One GAO level for a frontier chunk.
 
     frontier: (C, n_bound) int32; mult: (C,) int64; row_valid: (C,) bool
     Returns weighted counts (C,) if count_only else (cand, keep).
+
+    ``check_mode='bitset'`` (hybrid layout): every bound edge source in
+    the chunk is a hub — membership is one gather into its
+    ``bitset_words`` row plus a bit test, instead of ``n_iter``
+    binary-search gather rounds.  ``rep_tag`` maps vertex id -> bitset
+    row (the caller's bucketing guarantees tags >= 0 here).
     """
     m = indices.shape[0]
     xs = frontier[:, list(probe_cols)]                        # (C, P)
@@ -92,7 +99,15 @@ def _expand_level(indptr, indices, bitmaps, frontier, mult,
     for y, ci in check_sources:
         lo = indptr[y][:, None]
         hi = (indptr[y + 1])[:, None]
-        if check_mode == "tile":
+        if check_mode == "bitset":
+            # hybrid-layout membership: gather the check vertex's bitset
+            # word at cand>>5 and test bit cand&31 — O(1) per lane
+            # (kernels/intersect_bitset.py is the standalone form)
+            row = rep_tag[y]                               # (C,) >= 0
+            wordv = bitset_words[row[:, None],
+                                 (cand >> 5).astype(jnp.int32)]  # (C, W)
+            found = ((wordv >> (cand & 31).astype(jnp.uint32)) & 1) != 0
+        elif check_mode == "tile":
             # tile-leapfrog membership (the Pallas-kernel strategy in
             # HLO): gather the check segment ONCE and dense-compare —
             # one table gather instead of n_iter binary-search rounds.
@@ -190,10 +205,18 @@ class VLFTJ:
             self.n_iter1 = int(_math.ceil(_math.log2(blocks))) + 1
             self.n_iter2 = int(_math.ceil(_math.log2(2 * summary_stride
                                                      + 2))) + 1
+        # hybrid-layout routing: the planner's per-level representation
+        # choice is honoured only when the GraphDB actually carries a
+        # bitset layout (hubs occupy the renumbered id prefix)
+        layout = getattr(gdb, "layout", None)
+        self._n_hubs = int(layout.n_hubs) if layout is not None else 0
+        lv = plan.level_layouts
+        self.level_layouts = (lv if len(lv) == len(self.plan)
+                              else ("array",) * len(self.plan))
         # keep chunk x width under the element budget
         self.chunk_rows = self._chunk_cap
         self.stats = {"chunks": 0, "frontier_peak": 0, "candidates": 0,
-                      "tile_rows": 0, "bsearch_rows": 0,
+                      "tile_rows": 0, "bsearch_rows": 0, "bitset_rows": 0,
                       "ll_compiles": 0, "ll_calls": 0}
         # AOT-compiled final-level executables keyed on frontier geometry
         # (see last_level_extensions) — one compile per shape, then the
@@ -235,19 +258,38 @@ class VLFTJ:
                             axis=1)
         return nf, mult[reps], 0
 
-    def _bucket(self, frontier, mult, lp):
-        """Degree-bucket rows for the membership strategy (check_mode)."""
+    def _bucket(self, frontier, mult, lp, layout: str = "array"):
+        """Bucket rows by membership strategy: representation tags first
+        (hybrid layout), then degree (``check_mode='auto'``).
+
+        When the plan marked this level ``'bitset'``/``'mixed'`` and the
+        graph carries a layout, rows whose bound edge sources are *all*
+        hubs take the bitset gather-test path; the remainder falls
+        through to the configured array strategy.  Hubs are the
+        renumbered id prefix, so the tag test is one compare.
+        """
+        out = []
+        if (layout != "array" and self._n_hubs and lp.edge_sources
+                and len(lp.edge_sources) >= 2 and frontier.shape[0]):
+            elig = (frontier[:, list(lp.edge_sources)]
+                    < self._n_hubs).all(axis=1)
+            if elig.any():
+                self.stats["bitset_rows"] += int(elig.sum())
+                out.append((frontier[elig], mult[elig], "bitset"))
+                rest = ~elig
+                frontier, mult = frontier[rest], mult[rest]
+            if frontier.shape[0] == 0:
+                return out
         if self.check_mode != "auto" or not lp.edge_sources:
             mode = (self.check_mode if self.check_mode in
                     ("tile", "bsearch2") else "bsearch")
-            return [(frontier, mult, mode)]
+            return out + [(frontier, mult, mode)]
         deg = self.gdb.csr.degrees
         maxdeg = np.max(
             deg[frontier[:, list(lp.edge_sources)]], axis=1)
         tile = maxdeg <= self.tile_width
         self.stats["tile_rows"] += int(tile.sum())
         self.stats["bsearch_rows"] += int((~tile).sum())
-        out = []
         if tile.any():
             out.append((frontier[tile], mult[tile], "tile"))
         if (~tile).any():
@@ -308,15 +350,23 @@ class VLFTJ:
             C = frontier.shape[0]
             if C == 0:
                 break
-            groups = self._bucket(frontier, mult, lp)
+            groups = self._bucket(frontier, mult, lp,
+                                  layout=self.level_layouts[level])
             new_rows, new_vals, new_mult = [], [], []
             for gfrontier, gmult, mode in groups:
                 for s in range(0, gfrontier.shape[0], self.chunk_rows):
                     e = min(gfrontier.shape[0], s + self.chunk_rows)
-                    pad = self.chunk_rows - (e - s)
+                    # pad a partial chunk only to the next power of two:
+                    # kernel cost tracks live rows (a 100-row tail no
+                    # longer dispatches a full chunk_rows kernel) while
+                    # the jit cache stays bounded at log2(chunk_rows)
+                    # shapes per static-arg combo
+                    crows = min(self.chunk_rows,
+                                max(8, 1 << (e - s - 1).bit_length()))
+                    pad = crows - (e - s)
                     fchunk = np.pad(gfrontier[s:e], ((0, pad), (0, 0)))
                     mchunk = np.pad(gmult[s:e], (0, pad))
-                    rv = np.zeros(self.chunk_rows, dtype=bool)
+                    rv = np.zeros(crows, dtype=bool)
                     rv[: e - s] = True
                     args = (indptr, indices, bitmaps, jnp.asarray(fchunk),
                             jnp.asarray(mchunk), jnp.asarray(rv))
@@ -335,8 +385,11 @@ class VLFTJ:
                             summary=self.gdb.dev(
                                 f"summary:{self.summary_stride}"),
                             summary_stride=self.summary_stride)
+                    elif mode == "bitset":
+                        kw.update(rep_tag=self.gdb.dev("rep_tag"),
+                                  bitset_words=self.gdb.dev("bitset_words"))
                     self.stats["chunks"] += 1
-                    self.stats["candidates"] += self.chunk_rows * self.width
+                    self.stats["candidates"] += crows * self.width
                     if last_count:
                         total += int(np.asarray(_expand_level(
                             *args, count_only=True, **kw)).sum())

@@ -37,7 +37,7 @@ from jax.sharding import PartitionSpec
 
 from ..core.plan import GraphStats, JoinPlan, compile_levels
 from ..core.query import Query
-from ..graphs.csr import CSRGraph
+from ..graphs.csr import CSRGraph, degrees_from_indptr
 from .overlap import ring_schedule
 
 
@@ -148,7 +148,7 @@ class ShardedGraphDB:
     # -- planner / device bridges --------------------------------------------
     def graph_stats(self) -> GraphStats:
         """Planner stats from shard metadata alone (no reassembly)."""
-        max_deg = max((int(np.diff(iptr).max(initial=0))
+        max_deg = max((int(degrees_from_indptr(iptr).max(initial=0))
                        for iptr in self.local_indptr), default=0)
         n = max(1, self.n_nodes)
         return GraphStats(

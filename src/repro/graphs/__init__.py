@@ -1,11 +1,14 @@
-from .csr import CSRGraph
+from .csr import CSRGraph, degrees_from_indptr
 from .generators import (barabasi_albert, erdos_renyi, powerlaw_cluster,
                          zipf_graph, SNAP_LIKE)
 from .io import load_edgelist, save_edgelist
+from .layout import (HybridLayout, degree_sort_permutation, map_rows_back,
+                     renumber_csr)
 from .sampling import node_sample, NeighborSampler
 
 __all__ = [
-    "CSRGraph", "barabasi_albert", "erdos_renyi", "powerlaw_cluster",
-    "zipf_graph", "SNAP_LIKE", "load_edgelist", "save_edgelist",
-    "node_sample", "NeighborSampler",
+    "CSRGraph", "degrees_from_indptr", "barabasi_albert", "erdos_renyi",
+    "powerlaw_cluster", "zipf_graph", "SNAP_LIKE", "load_edgelist",
+    "save_edgelist", "HybridLayout", "degree_sort_permutation",
+    "map_rows_back", "renumber_csr", "node_sample", "NeighborSampler",
 ]

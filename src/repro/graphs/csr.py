@@ -6,7 +6,7 @@ is the per-node sorted neighbor list.  This is the index layout every engine
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -16,6 +16,10 @@ class CSRGraph:
     indptr: np.ndarray   # (n+1,) int64
     indices: np.ndarray  # (m,) int64, sorted within each row
     n_nodes: int
+    # cached np.diff(indptr) — every consumer (sampling, stats, vlftj
+    # bucketing, layout building) reads degrees repeatedly
+    _degrees: np.ndarray | None = field(default=None, repr=False,
+                                        compare=False)
 
     @classmethod
     def from_edges(cls, src: np.ndarray, dst: np.ndarray,
@@ -52,7 +56,11 @@ class CSRGraph:
 
     @property
     def degrees(self) -> np.ndarray:
-        return np.diff(self.indptr)
+        """Per-node degree, computed once and cached (treat as
+        read-only; shared by sampling, stats, and layout builders)."""
+        if self._degrees is None:
+            self._degrees = degrees_from_indptr(self.indptr)
+        return self._degrees
 
     @property
     def max_degree(self) -> int:
@@ -90,6 +98,13 @@ class CSRGraph:
             out[valid] = self.indices[flat[valid]]
         mask[valid] = True
         return out, mask
+
+
+def degrees_from_indptr(indptr: np.ndarray) -> np.ndarray:
+    """Degrees of a CSR row-pointer array — the one place the
+    ``np.diff(indptr)`` idiom lives (``CSRGraph.degrees`` caches it;
+    raw-indptr holders like the sharded CSR call it directly)."""
+    return np.diff(indptr)
 
 
 def triangle_count_csr(g: CSRGraph) -> int:

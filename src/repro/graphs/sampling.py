@@ -44,8 +44,9 @@ class NeighborSampler:
         g = self.g
         frontier = np.asarray(batch_nodes, dtype=np.int64)
         hops = []
+        all_deg = g.degrees          # cached on the CSRGraph
         for fanout in self.fanouts:
-            deg = g.degrees[frontier]
+            deg = all_deg[frontier]
             # with-replacement draws: offset = floor(u * deg)
             u = self.rng.random((frontier.shape[0], fanout))
             off = np.floor(u * np.maximum(deg, 1)[:, None]).astype(np.int64)

@@ -43,9 +43,11 @@ def _intersect_kernel(a_ref, alen_ref, b_ref, blen_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    def b_tile_body(bt, count):
+    blen = blen_ref[...]                # hoisted: constant across B tiles
+
+    def b_tile_body(state):
+        bt, count, _ = state
         b = b_ref[:, pl.dslice(bt * tile, tile)]          # (R, TILE)
-        blen = blen_ref[...]
         b_col = bt * tile + jax.lax.broadcasted_iota(jnp.int32, b.shape, 1)
         b_valid = b_col < blen
         b_min = jnp.min(jnp.where(b_valid, b, big))
@@ -63,10 +65,15 @@ def _intersect_kernel(a_ref, alen_ref, b_ref, blen_ref, out_ref, *,
 
         add = jax.lax.cond(overlap, dense_compare,
                            lambda _: jnp.zeros((rows,), jnp.int32), None)
-        return count + add
+        # sortedness: every later B tile has min >= b_min, so once
+        # b_min > a_max no tile can overlap again (a fully-padded tile
+        # reports b_min == INT_MAX and also terminates the scan)
+        return bt + 1, count + add, b_min > a_max
 
-    count = jax.lax.fori_loop(0, n_b_tiles, b_tile_body,
-                              jnp.zeros((rows,), jnp.int32))
+    _, count, _ = jax.lax.while_loop(
+        lambda s: (s[0] < n_b_tiles) & jnp.logical_not(s[2]),
+        b_tile_body,
+        (jnp.int32(0), jnp.zeros((rows,), jnp.int32), jnp.bool_(False)))
     out_ref[:, 0] += count
 
 

@@ -111,6 +111,56 @@ def intersect_count_ref(a: jax.Array, a_len: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Bitset intersection / membership (the hybrid-layout kernels)
+# ---------------------------------------------------------------------------
+
+def popcount32(v: jax.Array) -> jax.Array:
+    """Per-element popcount of a uint32 array (SWAR bit trick)."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((v * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+@jax.jit
+def bitset_intersect_count_ref(a_words: jax.Array,
+                               b_words: jax.Array) -> jax.Array:
+    """Per-row |A ∩ B| of two bitset rows: popcount(AND).
+
+    a_words, b_words: (R, W) uint32 characteristic vectors over a common
+    word-aligned domain.  Same ``(rows, counts)`` contract as
+    :func:`intersect_count_ref` — the cost is O(W) words regardless of
+    set cardinality, which is the dense-layout win for hub∩hub.
+    """
+    return popcount32(a_words & b_words).sum(axis=1)
+
+
+@jax.jit
+def bitset_member_ref(words: jax.Array, queries: jax.Array) -> jax.Array:
+    """Gather-test membership: bit ``q & 31`` of ``words[r, q >> 5]``.
+
+    words: (R, W) uint32 per-row bitsets; queries: (R, Q) int ids within
+    the word-aligned domain.  Returns (R, Q) bool — the O(1)-per-query
+    probe the hybrid engine uses in place of segmented binary search.
+    """
+    q = queries.astype(jnp.int32)
+    w = jnp.take_along_axis(words, (q >> 5).astype(jnp.int32), axis=1)
+    return ((w >> (q & 31).astype(jnp.uint32)) & 1) != 0
+
+
+@jax.jit
+def bitset_member_count_ref(words: jax.Array, b: jax.Array,
+                            b_len: jax.Array) -> jax.Array:
+    """Per-row |bitset ∩ B| for padded sorted arrays ``b`` with valid
+    lengths ``b_len`` — the bitset∩array half of the hybrid layout,
+    same ``(rows, counts)`` contract as :func:`intersect_count_ref`."""
+    valid = jnp.arange(b.shape[1])[None, :] < b_len[:, None]
+    hit = bitset_member_ref(words, jnp.where(valid, b, 0)) & valid
+    return hit.sum(axis=1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (causal, GQA) — oracle
 # ---------------------------------------------------------------------------
 

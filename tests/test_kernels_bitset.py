@@ -1,0 +1,133 @@
+"""Bitset intersection kernels vs numpy set oracles.
+
+Both Pallas kernels (interpret mode) and their jnp references must agree
+with ``np.intersect1d`` on randomly packed neighborhoods, including the
+padding identities (zero words for AND+popcount, masked lanes for the
+gather-test kernel).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.kernels import ops as kops
+from repro.kernels.intersect_bitset import (bitset_intersect_count_pallas,
+                                            bitset_member_count_pallas)
+from repro.kernels.ref import (bitset_intersect_count_ref, bitset_member_ref,
+                               bitset_member_count_ref, popcount32)
+
+
+def _pack(sets, n_words):
+    """Pack a list of sorted id arrays into (R, n_words) uint32 rows."""
+    words = np.zeros((len(sets), n_words), dtype=np.uint32)
+    for i, s in enumerate(sets):
+        s = np.asarray(s, dtype=np.int64)
+        np.bitwise_or.at(words[i], s >> 5,
+                         np.uint32(1) << (s & 31).astype(np.uint32))
+    return words
+
+
+def _rand_sets(rng, rows, domain, max_size):
+    return [np.unique(rng.integers(0, domain,
+                                   int(rng.integers(0, max_size + 1))))
+            for _ in range(rows)]
+
+
+def test_popcount32_matches_bit_count():
+    rng = np.random.default_rng(0)
+    v = rng.integers(0, 1 << 32, 256, dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(popcount32(jnp.asarray(v)))
+    want = np.array([bin(x).count("1") for x in v.tolist()])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), rows=st.sampled_from([8, 16]),
+       tile=st.sampled_from([128, 256]))
+def test_bitset_intersect_count_vs_intersect1d(seed, rows, tile):
+    rng = np.random.default_rng(seed)
+    n_words = tile  # domain = 32 * tile ids, one word tile per grid step
+    domain = 32 * n_words
+    a_sets = _rand_sets(rng, rows, domain, 600)
+    b_sets = _rand_sets(rng, rows, domain, 600)
+    a, b = _pack(a_sets, n_words), _pack(b_sets, n_words)
+    want = np.array([len(np.intersect1d(x, y))
+                     for x, y in zip(a_sets, b_sets)])
+    got_p = np.asarray(bitset_intersect_count_pallas(
+        jnp.asarray(a), jnp.asarray(b), tile=tile))
+    got_r = np.asarray(bitset_intersect_count_ref(
+        jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got_p, want)
+    np.testing.assert_array_equal(got_r, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), rows=st.sampled_from([8, 16]))
+def test_bitset_member_count_vs_intersect1d(seed, rows):
+    rng = np.random.default_rng(seed)
+    n_words, lb = 64, 256
+    domain = 32 * n_words
+    w_sets = _rand_sets(rng, rows, domain, 500)
+    b_sets = _rand_sets(rng, rows, domain, lb)
+    words = _pack(w_sets, n_words)
+    b = np.zeros((rows, lb), dtype=np.int32)
+    b_len = np.zeros(rows, dtype=np.int32)
+    for i, s in enumerate(b_sets):
+        b[i, :len(s)] = s
+        b_len[i] = len(s)
+        b[i, len(s):] = 7  # poison the padding: must be masked out
+    want = np.array([len(np.intersect1d(x, y))
+                     for x, y in zip(w_sets, b_sets)])
+    got_p = np.asarray(bitset_member_count_pallas(
+        jnp.asarray(words), jnp.asarray(b), jnp.asarray(b_len)))
+    got_r = np.asarray(bitset_member_count_ref(
+        jnp.asarray(words), jnp.asarray(b), jnp.asarray(b_len)))
+    np.testing.assert_array_equal(got_p, want)
+    np.testing.assert_array_equal(got_r, want)
+
+
+def test_bitset_member_mask():
+    words = _pack([[0, 5, 37], [1]], 4)
+    q = np.array([[0, 1, 5, 37], [0, 1, 5, 37]], dtype=np.int32)
+    got = np.asarray(bitset_member_ref(jnp.asarray(words), jnp.asarray(q)))
+    np.testing.assert_array_equal(
+        got, [[True, False, True, True], [False, True, False, False]])
+
+
+def test_zero_padding_is_identity():
+    """Zero words contribute nothing to AND+popcount; a zero-length
+    array row counts zero even when its buffer is non-zero."""
+    a = _pack([[1, 2, 3]], 8)
+    b = _pack([[2, 3, 4]], 8)
+    assert int(bitset_intersect_count_pallas(
+        jnp.asarray(a), jnp.asarray(b), rows_per_blk=1, tile=8)[0]) == 2
+    buf = np.full((1, 128), 2, dtype=np.int32)
+    assert int(bitset_member_count_pallas(
+        jnp.asarray(a), jnp.asarray(buf),
+        jnp.asarray(np.zeros(1, np.int32)), rows_per_blk=1)[0]) == 0
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_ops_wrappers_route_both_paths(use_pallas, monkeypatch):
+    monkeypatch.setattr(kops, "_USE_PALLAS", use_pallas)
+    rng = np.random.default_rng(3)
+    a_sets = _rand_sets(rng, 8, 32 * 128, 300)
+    b_sets = _rand_sets(rng, 8, 32 * 128, 300)
+    a, b = _pack(a_sets, 128), _pack(b_sets, 128)
+    want = np.array([len(np.intersect1d(x, y))
+                     for x, y in zip(a_sets, b_sets)])
+    np.testing.assert_array_equal(
+        np.asarray(kops.bitset_intersect_count(jnp.asarray(a),
+                                               jnp.asarray(b))), want)
+    lb = 128
+    arr = np.zeros((8, lb), np.int32)
+    alen = np.zeros(8, np.int32)
+    for i, s in enumerate(b_sets):
+        s = s[:lb]
+        arr[i, :len(s)] = s
+        alen[i] = len(s)
+    want2 = np.array([len(np.intersect1d(x, y[:lb]))
+                      for x, y in zip(a_sets, b_sets)])
+    np.testing.assert_array_equal(
+        np.asarray(kops.bitset_member_count(
+            jnp.asarray(a), jnp.asarray(arr), jnp.asarray(alen))), want2)

@@ -1,0 +1,217 @@
+"""Degree-adaptive hybrid layout: renumbering, bitset packing, and
+engine parity on a Zipf graph.
+
+Contracts under test:
+
+* ``degree_sort_permutation`` is a stable degree-descending bijection and
+  ``renumber_csr``/``map_rows_back`` round-trip both the graph and query
+  results;
+* ``HybridLayout`` packs exactly the hub prefix, its bitset rows decode
+  back to the CSR neighbor lists, and the budget/threshold knobs bound it;
+* every engine returns the same counts and rows on a
+  :class:`~repro.core.HybridGraphDB` as the scalar LFTJ oracle *on the
+  same db*, with the vectorized engine's bitset check path actually
+  exercised (``stats["bitset_rows"] > 0``);
+* the planner stamps ``level_layouts`` and the array-forced plan agrees.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (GraphDB, GraphStats, HybridGraphDB, count, get_query)
+from repro.core import engine as engine_mod
+from repro.core.planner import choose_level_layouts, plan_query
+from repro.core.vlftj import VLFTJ
+from repro.graphs import (CSRGraph, HybridLayout, degree_sort_permutation,
+                          map_rows_back, node_sample, renumber_csr,
+                          zipf_graph)
+
+PARITY_QUERIES = ["3-clique", "4-cycle", "4-clique", "3-path", "2-lollipop"]
+PARITY_ENGINES = ["minesweeper_ref", "binary", "vlftj", "hybrid", "auto"]
+
+
+@pytest.fixture(scope="module")
+def zgraph():
+    return zipf_graph(300, 2400, alpha=2.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def hdb(zgraph):
+    unary = {f"v{i}": node_sample(zgraph.n_nodes, 6.0, seed=17 * i + 1)
+             for i in range(1, 5)}
+    db = HybridGraphDB.build(zgraph, unary)
+    assert db.n_hubs > 0
+    return db
+
+
+# ---------------------------------------------------------------------------
+# renumbering
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(5, 120))
+def test_degree_sort_permutation_properties(seed, n):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(0, 4 * n))
+    g = CSRGraph.from_edges(rng.integers(0, n, m), rng.integers(0, n, m),
+                            n_nodes=n)
+    order, inv = degree_sort_permutation(g)
+    assert np.array_equal(np.sort(order), np.arange(n))
+    assert np.array_equal(order[inv], np.arange(n))          # inverse
+    d = g.degrees[order]
+    assert (d[:-1] >= d[1:]).all()                           # descending
+    ties = d[:-1] == d[1:]
+    assert (order[:-1][ties] < order[1:][ties]).all()        # stable
+
+
+def test_renumber_round_trip(zgraph):
+    order, inv = degree_sort_permutation(zgraph)
+    rg = renumber_csr(zgraph, inv)
+    assert rg.n_nodes == zgraph.n_nodes
+    assert rg.n_edges == zgraph.n_edges
+    # hubs occupy the id prefix in degree order
+    assert np.array_equal(rg.degrees, zgraph.degrees[order])
+    # edge sets identical up to relabeling
+    ea = zgraph.edge_array()
+    want = {(int(inv[a]), int(inv[b])) for a, b in ea}
+    assert want == set(map(tuple, rg.edge_array().tolist()))
+    # neighbor lists come back sorted in the new id space
+    for v in range(0, rg.n_nodes, 37):
+        nb = rg.neighbors(v)
+        assert (np.diff(nb) > 0).all() if len(nb) > 1 else True
+    # result rows map back through `order`
+    rows = np.array([[0, 1], [2, 0]])
+    back = map_rows_back(rows, order)
+    assert np.array_equal(back, np.asarray(order)[rows])
+
+
+# ---------------------------------------------------------------------------
+# bitset packing
+# ---------------------------------------------------------------------------
+
+def test_hybrid_layout_packs_hub_prefix(zgraph):
+    order, inv = degree_sort_permutation(zgraph)
+    rg = renumber_csr(zgraph, inv)
+    lay = HybridLayout.build(rg, min_degree=4, density=0.0)
+    deg = rg.degrees
+    assert lay.n_hubs == int((deg >= lay.min_degree).sum())
+    assert lay.words.shape == (lay.n_hubs, lay.n_words)
+    for h in range(lay.n_hubs):
+        np.testing.assert_array_equal(lay.neighbors_from_bits(h),
+                                      rg.neighbors(h))
+    tags = lay.rep_tags()
+    assert np.array_equal(tags[:lay.n_hubs], np.arange(lay.n_hubs))
+    assert (tags[lay.n_hubs:] == -1).all()
+
+
+def test_hybrid_layout_budget_and_caps(zgraph):
+    order, inv = degree_sort_permutation(zgraph)
+    rg = renumber_csr(zgraph, inv)
+    full = HybridLayout.build(rg, min_degree=1, density=0.0)
+    capped = HybridLayout.build(rg, min_degree=1, density=0.0,
+                                word_budget=3 * full.n_words)
+    assert capped.n_hubs == 3            # budget caps the hub count
+    few = HybridLayout.build(rg, min_degree=1, density=0.0, max_hubs=5)
+    assert few.n_hubs == 5
+    none = HybridLayout.build(rg, min_degree=10 ** 9)
+    assert none.n_hubs == 0 and none.rep_tags().min() == -1
+
+
+def test_unsorted_graph_degrades_to_prefix(zgraph):
+    # without renumbering only the qualifying *prefix* is packed — never
+    # a mis-tagged vertex
+    lay = HybridLayout.build(zgraph, min_degree=4, density=0.0)
+    deg = zgraph.degrees
+    assert lay.n_hubs <= zgraph.n_nodes
+    assert (deg[:lay.n_hubs] >= lay.min_degree).all()
+
+
+# ---------------------------------------------------------------------------
+# engine integration
+# ---------------------------------------------------------------------------
+
+def test_graph_stats_sees_layout(hdb):
+    stats = GraphStats.of(hdb)
+    assert stats.n_hubs == hdb.n_hubs > 0
+    assert 0.0 < stats.hub_edge_fraction <= 1.0
+    assert stats.bitset_words == hdb.layout.n_words
+    plain = GraphStats.of(GraphDB(hdb.csr, hdb.unary))
+    assert plain.n_hubs == 0
+    assert plain.fingerprint() != stats.fingerprint()
+
+
+def test_plan_stamps_level_layouts(hdb):
+    stats = GraphStats.of(hdb)
+    q = get_query("3-clique")
+    plan = plan_query(q, stats, engine="vlftj")
+    assert len(plan.level_layouts) == len(plan.gao)
+    assert plan.level_layouts[-1] in ("bitset", "mixed")
+    assert hash(plan) == hash(dataclasses.replace(plan))  # stays hashable
+    assert choose_level_layouts(q, plan.gao, stats) == plan.level_layouts
+    # no layout info -> all-array
+    plain = dataclasses.replace(
+        stats, n_hubs=0, hub_edge_fraction=0.0, bitset_words=0)
+    assert set(choose_level_layouts(q, plan.gao, plain)) == {"array"}
+
+
+def test_bitset_path_exercised_and_array_forced_agrees(hdb):
+    q = get_query("3-clique")
+    stats = GraphStats.of(hdb)
+    plan = plan_query(q, stats, engine="vlftj")
+    eng = VLFTJ(q, hdb, plan=plan)
+    got = eng.count()
+    assert eng.stats["bitset_rows"] > 0
+    arr_plan = dataclasses.replace(
+        plan, level_layouts=("array",) * len(plan.level_layouts))
+    assert VLFTJ(q, hdb, plan=arr_plan).count() == got
+
+
+@pytest.mark.parametrize("qname", PARITY_QUERIES)
+def test_engine_count_parity_on_hybrid_db(hdb, qname):
+    q = get_query(qname)
+    ref = count(q, hdb, engine="lftj_ref")
+    for eng in PARITY_ENGINES:
+        assert count(q, hdb, engine=eng) == ref, eng
+
+
+@pytest.mark.parametrize("qname", ["3-clique", "4-cycle", "3-path"])
+def test_engine_enumerate_parity_on_hybrid_db(hdb, qname):
+    q = get_query(qname)
+    ref = engine_mod.enumerate(q, hdb, engine="lftj_ref", mode="flat")
+    for eng in ["vlftj", "binary", "hybrid"]:
+        res = engine_mod.enumerate(q, hdb, engine=eng)
+        np.testing.assert_array_equal(res.expand(), ref.rows)
+
+
+def test_counts_renumbering_invariant_without_order_filters(zgraph, hdb):
+    # cliques' LessThan chains quotient the automorphism exactly; the
+    # plain-db count must match the renumbered-db count
+    plain = GraphDB(zgraph, {})
+    bare = HybridGraphDB.build(zgraph)
+    for qname in ["3-clique", "4-clique"]:
+        q = get_query(qname)
+        assert (count(q, bare, engine="vlftj")
+                == count(q, plain, engine="lftj_ref"))
+
+
+def test_rows_map_back_to_original_edges(zgraph, hdb):
+    q = get_query("3-clique")
+    res = engine_mod.enumerate(q, hdb, engine="vlftj", mode="flat")
+    rows = hdb.rows_to_original(np.asarray(res.rows))
+    es = set(map(tuple, zgraph.edge_array().tolist()))
+    for a, b, c in rows[:200].tolist():
+        assert (a, b) in es and (a, c) in es and (b, c) in es
+
+
+def test_dev_keys_with_and_without_hubs(hdb, zgraph):
+    w = np.asarray(hdb.dev("bitset_words"))
+    assert w.shape == (max(1, hdb.n_hubs), hdb.layout.n_words)
+    tags = np.asarray(hdb.dev("rep_tag"))
+    assert tags.shape == (hdb.n_nodes,)
+    empty = HybridGraphDB.build(zgraph, min_degree=10 ** 9)
+    assert np.asarray(empty.dev("bitset_words")).shape[0] == 1  # gatherable
+    assert (np.asarray(empty.dev("rep_tag")) == -1).all()
+    with pytest.raises(KeyError):
+        GraphDB(zgraph, {}).dev("bitset_words")
