@@ -1,0 +1,177 @@
+"""Preemptive serving benchmark: quantum scheduler vs FIFO under mixed load.
+
+The workload the scheduler exists for: one heavy full-graph 3-path
+enumeration racing N small sparse-sample 3-path counts on one server.
+Both policies run the *identical* workload through
+:class:`repro.serve.scheduler.QuantumScheduler`; only the policy differs
+(``fifo`` = run-to-completion in submission order, the pre-scheduler
+server behaviour).  Written to ``BENCH_serve.json`` by
+``record_baseline``:
+
+* ``serve/<policy>/small`` — small-query completion latency: p50/p99 on
+  the deterministic rows-expanded virtual clock (``vclock_done -
+  vclock_submit``) and p99 wall micros.
+* ``serve/<policy>/heavy`` — the heavy job: rows expanded, quanta,
+  preemptions.
+* ``serve/<policy>/total`` — work conservation + throughput: total rows
+  expanded across all jobs and wall rows/s.
+* ``serve/fairness`` — the headline: p99 improvement (fifo/quantum, on
+  the vclock) and the throughput ratio (quantum/fifo) — preemption must
+  buy fairness without giving up total throughput.
+
+Latency on the virtual clock is exact and reproducible across runs
+(``tests/test_scheduler.py::test_quantum_meter_deterministic``); wall
+numbers ride along for operators.  A warm-up pass runs the workload
+once untimed so jit compilation (identical kernel shapes for both
+policies — windows and pages do not depend on the policy) is excluded.
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.graphs import powerlaw_cluster
+from repro.serve import (QuantumScheduler, QueryRequest, QueryServer,
+                         TenantQuota)
+
+from .common import Row
+
+QUANTUM_ROWS = 4096
+N_SMALL = 16
+PAGE_ROWS = 2048
+
+
+def _graph(quick: bool, smoke: bool):
+    if smoke:
+        return powerlaw_cluster(400, 5, seed=0)
+    return powerlaw_cluster(800 if quick else 2500, 5, seed=0)
+
+
+def _workload(n_small: int) -> list[QueryRequest]:
+    heavy = QueryRequest("3-path", engine="vlftj", limit=10**9,
+                         selectivity=1.0)
+    smalls = [QueryRequest("3-path", engine="vlftj", seed=i % 4)
+              for i in range(n_small)]
+    return [heavy] + smalls
+
+
+def _run_policy(csr, policy: str, n_small: int) -> dict:
+    server = QueryServer(csr, page_rows=PAGE_ROWS)
+    sched = QuantumScheduler(server, quantum_rows=QUANTUM_ROWS,
+                             policy=policy,
+                             default_quota=TenantQuota(
+                                 max_in_flight=N_SMALL + 1))
+    t0 = time.time()
+    for req in _workload(n_small):
+        # the heavy enumeration streams-and-discards: fairness under
+        # load, not result buffering, is what this benchmark measures
+        sched.submit(req, collect_rows=req.limit is None)
+    results = sched.run()
+    wall_s = time.time() - t0
+    heavy, smalls = results[0], results[1:]
+    vlat = np.array([r.stats["vclock_done"] - r.stats["vclock_submit"]
+                     for r in smalls], dtype=np.int64)
+    wlat = np.array([r.latency_s for r in smalls])
+    total = sum(r.stats["rows_expanded"] for r in results)
+    return {
+        "policy": policy,
+        "small_p50_vclock": int(np.percentile(vlat, 50)),
+        "small_p99_vclock": int(np.percentile(vlat, 99)),
+        "small_p99_wall_us": float(np.percentile(wlat, 99) * 1e6),
+        "heavy_rows_expanded": heavy.stats["rows_expanded"],
+        "heavy_quanta": heavy.stats["quanta"],
+        "heavy_preemptions": heavy.stats["preemptions"],
+        "total_rows_expanded": total,
+        "wall_s": wall_s,
+        "rows_per_s": total / max(wall_s, 1e-9),
+    }
+
+
+def run(quick: bool = True, smoke: bool = False) -> list[Row]:
+    csr = _graph(quick, smoke)
+    n_small = N_SMALL // 2 if smoke else N_SMALL
+    _run_policy(csr, "fifo", n_small)       # warm-up: jit compiles
+    out = {p: _run_policy(csr, p, n_small) for p in ("fifo", "quantum")}
+    rows: list[Row] = []
+    for p, m in out.items():
+        rows.append(Row(
+            f"serve/{p}/small", m["small_p99_wall_us"],
+            f"p50_vclock={m['small_p50_vclock']};"
+            f"p99_vclock={m['small_p99_vclock']};n={n_small}"))
+        rows.append(Row(
+            f"serve/{p}/heavy", 0.0,
+            f"rows_expanded={m['heavy_rows_expanded']};"
+            f"quanta={m['heavy_quanta']};"
+            f"preemptions={m['heavy_preemptions']}"))
+        rows.append(Row(
+            f"serve/{p}/total", m["wall_s"] * 1e6,
+            f"rows_expanded={m['total_rows_expanded']};"
+            f"rows_per_s={m['rows_per_s']:.0f}"))
+    imp = out["fifo"]["small_p99_vclock"] \
+        / max(out["quantum"]["small_p99_vclock"], 1)
+    tput = out["quantum"]["rows_per_s"] / max(out["fifo"]["rows_per_s"],
+                                              1e-9)
+    rows.append(Row(
+        "serve/fairness", 0.0,
+        f"p99_improvement={imp:.1f}x;throughput_ratio={tput:.3f};"
+        f"equal_work="
+        f"{out['quantum']['total_rows_expanded'] == out['fifo']['total_rows_expanded']}"))
+    run._last = out     # record_baseline reuses the measurements
+    return rows
+
+
+def record_baseline(path: str | None = None, quick: bool = True,
+                    smoke: bool = False) -> dict:
+    """Write BENCH_serve.json: FIFO vs quantum fairness/throughput."""
+    rows = run(quick=quick, smoke=smoke)
+    out = run._last
+    imp = out["fifo"]["small_p99_vclock"] \
+        / max(out["quantum"]["small_p99_vclock"], 1)
+    payload = {
+        "bench": "serve",
+        "quick": quick,
+        "smoke": smoke,
+        "quantum_rows": QUANTUM_ROWS,
+        "n_small": N_SMALL // 2 if smoke else N_SMALL,
+        "policies": out,
+        "fairness": {
+            "small_p99_improvement": round(imp, 2),
+            "throughput_ratio": round(
+                out["quantum"]["rows_per_s"]
+                / max(out["fifo"]["rows_per_s"], 1e-9), 3),
+            "equal_work": (out["quantum"]["total_rows_expanded"]
+                           == out["fifo"]["total_rows_expanded"]),
+        },
+        "rows": [{"name": r.name, "us_per_call": round(r.us_per_call, 2),
+                  "derived": r.derived} for r in rows],
+    }
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return payload
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="preemptive serving fairness benchmark")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI profile: smallest graph, fewest smalls")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the BENCH json here instead of CSV rows")
+    a = ap.parse_args()
+    if a.out:
+        payload = record_baseline(path=a.out, quick=True, smoke=a.smoke)
+        fair = payload["fairness"]
+        print(f"wrote {a.out} "
+              f"(p99_improvement={fair['small_p99_improvement']}x, "
+              f"throughput_ratio={fair['throughput_ratio']})")
+    else:
+        for row in run(quick=a.quick or a.smoke, smoke=a.smoke):
+            print(row.csv())

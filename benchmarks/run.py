@@ -16,7 +16,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: cyclic,acyclic,ideas,gao,"
                          "granularity,scaling,agm,planner,dist,"
-                         "enumerate,layout")
+                         "enumerate,layout,serve")
     args = ap.parse_args()
     quick = not args.full
 
@@ -33,6 +33,7 @@ def main() -> None:
         "dist": "bench_dist",              # sharded join + compression
         "enumerate": "bench_enumerate",    # flat/chunked/factorized rows
         "layout": "bench_layout",          # bitset/array crossover
+        "serve": "bench_serve",            # preemptive scheduler fairness
     }
     chosen = (args.only.split(",") if args.only else list(modules))
     unknown = [k for k in chosen if k not in modules]

@@ -1,8 +1,11 @@
-"""End-to-end driver: batched graph-pattern query serving.
+"""End-to-end driver: batched + preemptive graph-pattern query serving.
 
 The paper's workload as a service: a resident graph, clients submitting
 pattern queries with per-request samples, the engine router picking the
-Table-6/7 winner per query shape.
+Table-6/7 winner per query shape.  Part 2 shows the preemptive
+scheduler: the same mixed light/heavy load under FIFO vs quantum
+round-robin, with per-tenant admission control (the transcript in
+docs/SERVING.md comes from this script).
 
     PYTHONPATH=src python examples/serve_queries.py
 """
@@ -11,7 +14,8 @@ import time
 import numpy as np
 
 from repro.graphs import powerlaw_cluster
-from repro.serve import QueryRequest, QueryServer
+from repro.serve import (AdmissionError, QuantumScheduler, QueryRequest,
+                         QueryServer, TenantQuota)
 
 g = powerlaw_cluster(n=5000, m_per_node=6, seed=0)
 server = QueryServer(g)
@@ -44,3 +48,43 @@ for eng, lats in sorted(by_engine.items()):
     p50 = lats[len(lats) // 2] * 1e3
     print(f"  {eng:10s}: n={len(lats)} p50={p50:.1f}ms "
           f"max={max(lats)*1e3:.1f}ms")
+
+# -- part 2: preemptive scheduling under mixed light/heavy load -------------
+# One heavy full-graph 3-path enumeration racing six small counts.  FIFO
+# (run-to-completion, the batch behaviour above) starves the smalls;
+# the quantum policy round-robins slices of `quantum_rows` expanded
+# rows, so every small finishes within a few quanta of submission.
+print("\n--- preemptive scheduling: 1 heavy enumeration vs 6 smalls ---")
+
+
+def mixed_load(policy: str):
+    sched = QuantumScheduler(server, quantum_rows=8192, policy=policy)
+    sched.submit(QueryRequest("3-path", engine="vlftj", limit=10**9,
+                              selectivity=2.0), collect_rows=False)
+    for i in range(6):
+        sched.submit(QueryRequest("3-clique", engine="vlftj", seed=i % 3))
+    return sched.run()
+
+
+for policy in ("fifo", "quantum"):
+    results = mixed_load(policy)
+    heavy, smalls = results[0], results[1:]
+    done = [r.stats["vclock_done"] - r.stats["vclock_submit"]
+            for r in smalls]
+    print(f"  {policy:7s}: heavy rows_expanded="
+          f"{heavy.stats['rows_expanded']:,} "
+          f"quanta={heavy.stats['quanta']} | small completion "
+          f"(rows-expanded clock) p50={sorted(done)[len(done)//2]:,} "
+          f"max={max(done):,}")
+
+# -- part 3: per-tenant quotas (429-style admission control) ----------------
+print("\n--- admission control: tenant 'b' capped at 2 in flight ---")
+sched = QuantumScheduler(server, quantum_rows=8192,
+                         quotas={"b": TenantQuota(max_in_flight=2)})
+for i in range(4):
+    try:
+        tok = sched.submit(QueryRequest("3-clique", tenant="b", seed=i))
+        print(f"  submit #{i}: admitted as {tok}")
+    except AdmissionError as e:
+        print(f"  submit #{i}: HTTP {e.status} — {e}")
+sched.run()

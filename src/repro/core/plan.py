@@ -243,15 +243,31 @@ class JoinPlan:
     planner costs flat-vs-factorized emission
     (``planner.estimate_emission``) and records the cheaper mode here.
 
-    ``level_callback`` is the adaptive-execution hook: when set, the
-    executing engine calls ``callback(level, frontier, mult)`` at every
-    GAO level boundary (after level ``level``'s frontier is built, before
-    the next level runs) and, if the callback returns a ``(frontier,
-    mult)`` pair, continues with that pair instead.  The distributed
-    layer uses it to re-deal skewed frontiers across shards mid-join
-    (``repro.dist.rebalance.FrontierRebalancer``).  The field is excluded
-    from equality/hashing — a plan with a callback attached still hits
-    the same :class:`~repro.core.planner.PlanCache` entry.
+    ``level_callback`` is the adaptive-execution hook — the *level
+    boundary protocol*:
+
+    * the executing engine calls ``callback(level, frontier, mult)`` at
+      every interior GAO level boundary, i.e. after level ``level``'s
+      frontier is built and before level ``level + 1`` runs.  ``frontier``
+      is the ``(rows, level + 1)`` int32 array of partial bindings and
+      ``mult`` the ``(rows,)`` int64 multiplicities;
+    * the callback may return ``None`` (continue unchanged) or a
+      replacement ``(frontier, mult)`` pair — e.g. a row permutation
+      that re-deals skewed frontiers across shards
+      (``repro.dist.rebalance.FrontierRebalancer``);
+    * the callback may also *raise* to suspend execution: the serving
+      layer's quantum budget
+      (:class:`repro.serve.scheduler.QuantumBudget`) raises
+      :class:`~repro.serve.scheduler.Preempted` carrying a
+      :class:`~repro.serve.scheduler.PlanSnapshot` of exactly the
+      ``(frontier, mult, next level)`` state, which
+      ``VLFTJ._run(start_level=)`` / :meth:`VLFTJ.advance` can resume
+      loss-free (row-for-row parity with uninterrupted execution).
+
+    The field is excluded from equality/hashing — a plan with a callback
+    attached still hits the same
+    :class:`~repro.core.planner.PlanCache` entry.  Attach one with
+    :meth:`with_level_callback`.
     """
 
     query: Query
@@ -282,6 +298,17 @@ class JoinPlan:
                     self, "levels", compile_levels(self.query, self.gao))
             except ValueError:
                 pass  # non-graph atoms: the executing engine decides
+
+    def with_level_callback(self, callback) -> "JoinPlan":
+        """A copy of this plan with ``level_callback`` replaced.
+
+        Because the callback is excluded from equality/hashing, the copy
+        keys the same :class:`~repro.core.planner.PlanCache` entry as the
+        original — cached plans can be instrumented per-request (budget
+        accounting, rebalancing) without cache misses.
+        """
+        import dataclasses
+        return dataclasses.replace(self, level_callback=callback)
 
     @property
     def agm_bound(self) -> float:

@@ -311,7 +311,14 @@ class VLFTJ:
         (``repro.dist.rebalance.AdaptiveJoin``) advances shards one level
         at a time this way.  When the plan carries a ``level_callback``
         it runs at every interior level boundary and may replace the
-        ``(frontier, mult)`` pair (e.g. re-dealing rows across shards).
+        ``(frontier, mult)`` pair (e.g. re-dealing rows across shards)
+        or *raise* to suspend — the quantum scheduler's budget callback
+        raises ``repro.serve.scheduler.Preempted`` carrying exactly this
+        ``(frontier, mult, next level)`` state, which a later
+        ``_run(frontier=..., mult=..., start_level=...)`` call resumes
+        without losing or repeating any work (level boundaries are the
+        engine's only host-visible synchronization points, so suspension
+        there is lossless by construction).
         """
         gdb = self.gdb
         indptr, indices = gdb.dev("indptr"), gdb.dev("indices")
@@ -547,6 +554,57 @@ class VLFTJ:
     def output_vars(self) -> tuple[str, ...]:
         """Column order of :meth:`enumerate` (the plan's GAO)."""
         return self.gao
+
+    # -- suspend / resume ----------------------------------------------------
+    def advance(self, frontier: np.ndarray | None = None,
+                mult: np.ndarray | None = None,
+                start_level: int | None = None,
+                max_levels: int | None = None) -> np.ndarray:
+        """Advance a partial-binding frontier through GAO levels — the
+        public suspend/resume hook.
+
+        Args:
+            frontier: ``(rows, w)`` int32 partial bindings with ``w``
+                GAO columns already bound (``None``: start fresh from
+                the level-0 domain).
+            mult: ``(rows,)`` int64 multiplicities (``None``: ones).
+            start_level: resume level (``None``: inferred as ``w``).
+            max_levels: stop after building the frontier of this many
+                bound columns (``None``: all levels).
+
+        Returns:
+            The ``(rows', max_levels)`` frontier of surviving bindings.
+
+        Raises:
+            Whatever the plan's ``level_callback`` raises — the serving
+            scheduler's budget callback raises
+            :class:`repro.serve.scheduler.Preempted` carrying a
+            :class:`repro.serve.scheduler.PlanSnapshot`; feeding that
+            snapshot's ``(frontier, mult, start_level)`` back into this
+            method continues the join exactly where it stopped.
+
+        Example::
+
+            ex = VLFTJ(query, gdb, plan=plan)
+            penult = ex.advance(max_levels=len(ex.plan) - 1)
+            counts = ex.last_level_counts(penult.astype(np.int32))
+        """
+        out = self._run(count_only=False, frontier=frontier, mult=mult,
+                        start_level=start_level, max_levels=max_levels)
+        return np.asarray(out, dtype=np.int64)
+
+    def resume_count(self, frontier: np.ndarray, mult: np.ndarray,
+                     start_level: int | None = None) -> int:
+        """Finish a suspended *count* from a snapshot's ``(frontier,
+        mult)`` state: the weighted count of all completions of the
+        partial bindings.  ``resume_count(snap.frontier, snap.mult)``
+        after an uninterrupted prefix equals the uninterrupted
+        :meth:`count` — asserted in ``tests/test_scheduler.py``."""
+        return int(self._run(
+            count_only=True,
+            frontier=np.asarray(frontier, dtype=np.int32),
+            mult=np.asarray(mult, dtype=np.int64),
+            start_level=start_level))
 
     def seeded_count(self, seed_values: np.ndarray,
                      seed_mult: np.ndarray) -> int:

@@ -51,10 +51,50 @@ class ResultCursor:
     ``take(page_rows)`` or ``None`` when exhausted; iteration yields
     pages.  ``vars`` names the columns; rows are int64 and arrive in
     lexicographic order.
+
+    Args:
+        executor: the :class:`~repro.core.vlftj.VLFTJ` instance to
+            stream from (its plan fixes the column order ``vars``).
+        page_rows: rows per page — also the tail-buffer bound knob (the
+            buffer never exceeds ``page_rows + max(width, page_rows)``
+            rows).
+        seeds: optional pre-bindings of the first GAO variable.
+        frontier: optional *resume* frontier — an ``(n, w)`` int32 array
+            of partial bindings with ``w <= k - 1`` GAO columns already
+            bound, e.g. a suspended
+            :class:`~repro.serve.scheduler.PlanSnapshot`'s state.  The
+            cursor continues the join from level ``w`` instead of level
+            0; with ``w == k - 1`` (the penultimate frontier) no
+            interior level runs at all and paging starts immediately.
+        skip_rows: drop this many leading output rows before serving
+            any — the other half of snapshot resume: a stream that
+            already delivered ``n`` rows restarts with ``skip_rows=n``
+            and continues row-for-row where it left off (the block
+            stream is deterministic, so the skip is exact).
+
+    Raises:
+        ValueError: ``page_rows < 1``.
+        repro.serve.scheduler.Preempted: propagated from the executor's
+            plan ``level_callback`` when a quantum budget expires while
+            the first ``take``/``next_page`` call is still building the
+            penultimate frontier (interior levels run lazily on first
+            pull).  The carried snapshot resumes via ``frontier=``.
+
+    Example::
+
+        cur = ResultCursor(VLFTJ(q, gdb, plan=plan), page_rows=512)
+        first = cur.take(512)
+        # ... suspend: remember cur.penultimate / cur.rows_emitted ...
+        cur2 = ResultCursor(VLFTJ(q, gdb, plan=plan), page_rows=512,
+                            frontier=cur.penultimate,
+                            skip_rows=cur.rows_emitted)
+        rest = [p for p in cur2]    # continues after `first`, exactly
     """
 
     def __init__(self, executor: VLFTJ, page_rows: int = 1024,
-                 seeds: np.ndarray | None = None):
+                 seeds: np.ndarray | None = None,
+                 frontier: np.ndarray | None = None,
+                 skip_rows: int = 0):
         if page_rows < 1:
             raise ValueError("page_rows must be >= 1")
         self.vars = executor.gao
@@ -66,8 +106,14 @@ class ResultCursor:
         self._buffered = 0
         self._drained = False
         self.exhausted = False
-        self._blocks: Iterator[np.ndarray] = \
-            self._vlftj_blocks(executor, seeds)
+        #: the lex-sorted penultimate frontier, available once the first
+        #: page is pulled (None for single-level plans and wrapped
+        #: sources) — what a mid-paging suspension snapshots
+        self.penultimate: np.ndarray | None = None
+        self._skip = int(skip_rows)
+        blocks = self._vlftj_blocks(executor, seeds, frontier)
+        self._blocks: Iterator[np.ndarray] = (
+            blocks if not self._skip else self._skipped(blocks))
 
     # -- alternate sources ---------------------------------------------------
     @classmethod
@@ -85,6 +131,8 @@ class ResultCursor:
         cur._buffered = 0
         cur._drained = False
         cur.exhausted = False
+        cur.penultimate = None
+        cur._skip = 0
         cur._blocks = iter(blocks)
         return cur
 
@@ -97,8 +145,19 @@ class ResultCursor:
                                page_rows)
 
     # -- the VLFTJ streaming source ------------------------------------------
-    def _vlftj_blocks(self, ex: VLFTJ,
-                      seeds: np.ndarray | None) -> Iterator[np.ndarray]:
+    def _skipped(self, blocks: Iterator[np.ndarray]) -> Iterator[np.ndarray]:
+        """Drop the first ``skip_rows`` output rows (snapshot resume)."""
+        left = self._skip
+        for block in blocks:
+            if left >= block.shape[0]:
+                left -= block.shape[0]
+                continue
+            yield block[left:] if left else block
+            left = 0
+
+    def _vlftj_blocks(self, ex: VLFTJ, seeds: np.ndarray | None,
+                      resume: np.ndarray | None = None
+                      ) -> Iterator[np.ndarray]:
         k = len(ex.plan)
         if k == 1:
             vals = (np.asarray(seeds) if seeds is not None
@@ -108,14 +167,19 @@ class ResultCursor:
             for s in range(0, vals.shape[0], self.page_rows):
                 yield vals[s:s + self.page_rows, None]
             return
-        seed_frontier = None if seeds is None \
-            else np.asarray(seeds, dtype=np.int32)[:, None]
+        if resume is not None:
+            seed_frontier = np.asarray(resume, dtype=np.int32)
+        elif seeds is not None:
+            seed_frontier = np.asarray(seeds, dtype=np.int32)[:, None]
+        else:
+            seed_frontier = None
         frontier = np.asarray(
             ex._run(count_only=False, frontier=seed_frontier,
                     max_levels=k - 1), dtype=np.int64)
         if frontier.shape[0] == 0:
             return
         frontier = frontier[np.lexsort(frontier.T[::-1])]
+        self.penultimate = frontier
         self.stats["frontier_rows"] = int(frontier.shape[0])
         if not ex.plan[-1].edge_sources:
             # dense final level (no bound edge neighbor): the fanout is
@@ -206,6 +270,12 @@ class ResultCursor:
         self.stats["rows"] += int(out.shape[0])
         self.exhausted = self._drained and self._buffered == 0
         return out
+
+    @property
+    def rows_emitted(self) -> int:
+        """Total output rows delivered so far, counting any resume skip
+        — the ``rows_emitted`` a mid-paging snapshot records."""
+        return self._skip + self.stats["rows"]
 
     def next_page(self) -> np.ndarray | None:
         """``take(page_rows)``, or ``None`` once the stream is exhausted."""

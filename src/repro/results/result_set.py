@@ -102,7 +102,37 @@ class FLevel:
 
 @dataclass(frozen=True)
 class FactorizedResult:
-    """Trie-factorized join output along a GAO (see module docstring)."""
+    """Trie-factorized join output along a GAO.
+
+    The EmptyHeaded-style compressed representation: level ``j`` holds
+    the distinct bindings of ``vars[j]`` *per parent path*, each entry
+    pointing at its parent in level ``j-1`` (:class:`FLevel`).  A
+    high-fanout join whose flat output is ``count() × k`` int64 cells
+    stores only the union-node arrays — ``nbytes`` vs a flat
+    ``ResultSet`` is the compression ratio ``BENCH_enumerate.json``
+    tracks.
+
+    Attributes:
+        vars: column order — always the plan's GAO (trie order *is*
+            lex order, so ``expand()`` needs no sort).
+        levels: one :class:`FLevel` per variable; ``levels[-1].values``
+            has exactly ``count()`` entries (one leaf per tuple).
+
+    Construction: ``results.factorize_vlftj(executor)`` builds the trie
+    natively from the penultimate frontier + final-level extension
+    segments without materializing the flat cross-product;
+    :meth:`from_rows` trie-compresses any engine's flat rows.  The
+    planner costs flat-vs-factorized emission and stamps the cheaper
+    mode into ``JoinPlan.output_mode``, which ``core.engine.enumerate``
+    honours.
+
+    Example::
+
+        fr = engine.enumerate(q, gdb, mode="factorized")
+        fr.count()                  # O(1), no expansion
+        fr.project(fr.vars[:2])     # GAO-prefix: trie truncation
+        rows = fr.expand()          # flat (count, k) lex-ordered rows
+    """
 
     vars: tuple[str, ...]
     levels: tuple[FLevel, ...]

@@ -1,3 +1,9 @@
 from .query_server import QueryRequest, QueryResult, QueryServer
+from .scheduler import (AdmissionError, PlanSnapshot, Preempted,
+                        QuantumBudget, QuantumScheduler, TenantQuota)
 
-__all__ = ["QueryRequest", "QueryResult", "QueryServer"]
+__all__ = [
+    "QueryRequest", "QueryResult", "QueryServer",
+    "AdmissionError", "PlanSnapshot", "Preempted", "QuantumBudget",
+    "QuantumScheduler", "TenantQuota",
+]

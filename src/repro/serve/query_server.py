@@ -46,6 +46,19 @@ from ..results import ResultCursor
 
 @dataclass
 class QueryRequest:
+    """One client request against the resident graph.
+
+    ``query_name`` picks a paper pattern (``repro.core.PAPER_QUERIES``);
+    ``selectivity``/``seed`` regenerate the per-request unary samples;
+    ``engine`` pins a physical operator (default: planner's choice).
+    ``limit`` turns the request into enumeration (one page of up to
+    ``limit`` rows) and ``cursor`` resumes a previous response's
+    ``next_cursor`` token.  ``tenant`` names the quota bucket the
+    preemptive scheduler (``repro.serve.scheduler``) meters admission
+    and parked-frontier bytes against; the plain ``execute`` path
+    ignores it.
+    """
+
     query_name: str
     selectivity: float | None = None   # regenerate v1/v2 samples at 1/s
     seed: int = 0
@@ -54,6 +67,7 @@ class QueryRequest:
     # a previous response's next_cursor token (limit then sizes the page)
     limit: int | None = None
     cursor: str | None = None
+    tenant: str = "default"
 
     @property
     def wants_rows(self) -> bool:
@@ -62,6 +76,13 @@ class QueryRequest:
 
 @dataclass
 class QueryResult:
+    """One response: the count (or page-row count), the engine label
+    that actually ran, and observability in ``stats`` — always the
+    server's ``plan_cache`` hit/miss counters and cursor-registry state
+    (open cursors + closed-token reason tallies), plus scheduling
+    counters (``quanta``/``preemptions``/``rows_expanded``/…) when the
+    result came through the quantum scheduler."""
+
     request: QueryRequest
     count: int
     engine: str
@@ -74,6 +95,7 @@ class QueryResult:
     rows: np.ndarray | None = None
     row_vars: tuple[str, ...] | None = None
     next_cursor: str | None = field(default=None)
+    stats: dict = field(default_factory=dict)
 
 
 class QueryServer:
@@ -108,13 +130,43 @@ class QueryServer:
         self._cursors: "OrderedDict[str, tuple[ResultCursor, str, JoinPlan]]" \
             = OrderedDict()
         self._closed: "OrderedDict[str, str]" = OrderedDict()
+        self._close_reasons: dict[str, int] = {}
         self._cursor_seq = 0
 
     def _close_cursor(self, token: str, reason: str) -> None:
+        """Drop a registry entry, remembering *why* (``'exhausted'`` |
+        ``'evicted'`` | ``'quota'``) for the resume-error message and
+        the ``cursor_info()`` tallies."""
         self._cursors.pop(token, None)
         self._closed[token] = reason
+        self._close_reasons[reason] = self._close_reasons.get(reason, 0) + 1
         while len(self._closed) > 4 * self.max_open_cursors:
             self._closed.popitem(last=False)
+
+    def _register_cursor(self, payload, label: str, plan: JoinPlan | None,
+                         token: str | None = None) -> str:
+        """Park a payload (pagination cursor or a scheduler
+        :class:`~repro.serve.scheduler.PlanSnapshot`) in the LRU
+        registry; the oldest entries are evicted past
+        ``max_open_cursors`` with reason ``'evicted'``."""
+        if token is None:
+            self._cursor_seq += 1
+            token = f"cur-{self._cursor_seq}"
+        self._cursors[token] = (payload, label, plan)
+        self._cursors.move_to_end(token)
+        while len(self._cursors) > self.max_open_cursors:
+            self._close_cursor(next(iter(self._cursors)), "evicted")
+        return token
+
+    def cursor_info(self) -> dict:
+        """Registry observability: open-entry count and closed-token
+        reason tallies — surfaced in every ``QueryResult.stats``."""
+        return {"open": len(self._cursors),
+                "closed": dict(self._close_reasons)}
+
+    def _result_stats(self) -> dict:
+        return {"plan_cache": self.plan_cache_info(),
+                "cursors": self.cursor_info()}
 
     def _routes_to_dist(self, plan: JoinPlan, gdb: GraphDB) -> bool:
         return (self.dist_edge_threshold is not None
@@ -203,19 +255,46 @@ class QueryServer:
             if token is not None:
                 self._close_cursor(token, "exhausted")
             token = None
-        elif token is None:
-            self._cursor_seq += 1
-            token = f"cur-{self._cursor_seq}"
-            self._cursors[token] = (cur, label, plan)
-            while len(self._cursors) > self.max_open_cursors:
-                self._close_cursor(next(iter(self._cursors)), "evicted")
         else:
-            self._cursors.move_to_end(token)
+            token = self._register_cursor(cur, label, plan, token=token)
         return QueryResult(req, int(page.shape[0]), label,
                            time.time() - t0, plan=plan, plan_cached=cached,
-                           rows=page, row_vars=cur.vars, next_cursor=token)
+                           rows=page, row_vars=cur.vars, next_cursor=token,
+                           stats=self._result_stats())
 
     def execute(self, req: QueryRequest) -> QueryResult:
+        """Run one request to completion (or to one cursor page).
+
+        Args:
+            req: count requests (no ``limit``/``cursor``) return the
+                pattern count; ``limit=`` requests return one page of
+                rows plus a ``next_cursor`` continuation token;
+                ``cursor=`` requests resume a parked server-side cursor
+                (``limit`` then sizes the page).
+
+        Returns:
+            A :class:`QueryResult`; ``stats`` carries the plan-cache
+            counters and cursor-registry state at response time.
+
+        Raises:
+            ValueError: resuming a dead cursor token.  The message says
+                why it died: ``evicted`` (LRU aged it out — restart
+                pagination from the first page), ``exhausted`` (fully
+                delivered — do not restart), or ``unknown`` (never
+                issued, or aged out of the closed-token memory).
+            KeyError: unknown ``query_name``.
+
+        Example::
+
+            r = server.execute(QueryRequest("3-path", limit=100))
+            while r.next_cursor is not None:
+                r = server.execute(QueryRequest(
+                    "3-path", limit=100, cursor=r.next_cursor))
+
+        For preemptive, fair scheduling of *concurrent* requests use
+        :meth:`execute_concurrent` instead — this method runs a single
+        request to completion and a heavy one will block the caller.
+        """
         t0 = time.time()
         if req.cursor is not None:
             try:
@@ -246,9 +325,25 @@ class QueryServer:
         plan, cached = self._plan_for(req, gdb)
         c, label = self._execute_plan(plan, gdb, req)
         return QueryResult(req, c, label, time.time() - t0,
-                           plan=plan, plan_cached=cached)
+                           plan=plan, plan_cached=cached,
+                           stats=self._result_stats())
 
     def execute_batch(self, reqs: list[QueryRequest]) -> list[QueryResult]:
+        """Run a batch sequentially, sorted by (selectivity, seed) so
+        consecutive requests share a warm device graph.
+
+        Args:
+            reqs: any mix of count / enumeration / cursor requests.
+
+        Returns:
+            Results in the *original* request order (the warm-graph
+            sort is internal).
+
+        Each request still runs to completion before the next starts —
+        no cross-request fairness.  Prefer :meth:`execute_many` for
+        plan-grouped throughput, :meth:`execute_concurrent` for
+        fairness under mixed light/heavy load.
+        """
         # group by (selectivity, seed) so the device graph stays warm
         order = sorted(range(len(reqs)),
                        key=lambda i: (reqs[i].selectivity or 0,
@@ -259,7 +354,7 @@ class QueryServer:
         return results  # type: ignore
 
     def execute_many(self, reqs: list[QueryRequest]) -> list[QueryResult]:
-        """Plan-grouped batched execution.
+        """Plan-grouped batched execution (throughput-optimized).
 
         Requests are planned first (warming the plan cache), then grouped
         by (plan, graph) and executed group-by-group: consecutive
@@ -270,6 +365,17 @@ class QueryServer:
         (``limit=``) plan with ``output='rows'`` and group the same way;
         cursor continuations already hold their machinery and run
         directly.
+
+        Args:
+            reqs: the batch; order of the returned results matches it.
+
+        Returns:
+            One :class:`QueryResult` per request; ``latency_s`` matches
+            :meth:`execute` semantics (planning share + execution).
+
+        Like :meth:`execute_batch` this optimizes *throughput*, not
+        fairness — a heavy group member still runs to completion.  See
+        :meth:`execute_concurrent` for quantum-sliced fairness.
         """
         prepared = []   # (index, plan, cached, gdb, plan_s)
         results: list[QueryResult | None] = [None] * len(reqs)
@@ -300,5 +406,56 @@ class QueryServer:
                 # latency_s matches execute(): planning share + execution
                 results[i] = QueryResult(
                     reqs[i], c, label, plan_s + time.time() - t0,
-                    plan=plan, plan_cached=cached)
+                    plan=plan, plan_cached=cached,
+                    stats=self._result_stats())
         return results  # type: ignore
+
+    def execute_concurrent(self, reqs: list[QueryRequest],
+                           quantum_rows: int = 8192,
+                           policy: str = "quantum",
+                           quotas: dict | None = None,
+                           collect_rows: bool = True
+                           ) -> list[QueryResult]:
+        """Fairness-optimized concurrent execution (preemptive).
+
+        Admits every request into a
+        :class:`~repro.serve.scheduler.QuantumScheduler` and round-robins
+        quanta of ``quantum_rows`` expanded rows across them, so N small
+        queries do not queue behind one heavy enumeration.  Per-tenant
+        quotas (``req.tenant``) gate admission; a request rejected
+        429-style comes back as a result with ``engine='rejected'`` and
+        ``stats['status'] == 429`` instead of raising, so batch callers
+        keep positional correspondence.
+
+        Args:
+            reqs: the concurrent batch (no ``cursor=`` continuations —
+                those resume directly via :meth:`execute`).
+            quantum_rows: the scheduling quantum, in expanded rows.
+            policy: ``'quantum'`` (preemptive) or ``'fifo'`` (baseline).
+            quotas: per-tenant ``{name: TenantQuota}`` overrides.
+            collect_rows: buffer enumeration pages into results (False
+                streams-and-discards, keeping memory bounded).
+
+        Returns:
+            Results in request order; scheduling stats (``quanta``,
+            ``preemptions``, ``rows_expanded``, virtual clocks) ride in
+            each ``QueryResult.stats``.
+        """
+        from .scheduler import AdmissionError, QuantumScheduler
+        sched = QuantumScheduler(self, quantum_rows=quantum_rows,
+                                 policy=policy, quotas=quotas)
+        rejected: dict[int, QueryResult] = {}
+        order: list[str] = []
+        for i, req in enumerate(reqs):
+            try:
+                order.append(sched.submit(req, collect_rows=collect_rows))
+            except AdmissionError as e:
+                order.append("")
+                rejected[i] = QueryResult(
+                    req, 0, "rejected", 0.0,
+                    stats={"status": e.status, "error": str(e)})
+        sched.run()
+        done = {j.token: j.result for j in sched._jobs
+                if j.result is not None}
+        return [rejected[i] if tok == "" else done[tok]
+                for i, tok in enumerate(order)]

@@ -1,0 +1,380 @@
+"""Preemptive multi-tenant scheduling (repro.serve.scheduler).
+
+The contract under test: quantum-sliced execution is *lossless* —
+suspend/resume at GAO level boundaries yields exactly the counts and
+rows of uninterrupted execution on every tier-1 query shape — and
+*deterministic* — the rows-expanded meter, preemption points, and
+virtual-clock completion times are identical across runs.  On top of
+that: round-robin fairness bounds small-query completion under a
+concurrent heavy enumeration, per-tenant quotas reject 429-style, and
+parked snapshots share the cursor registry's eviction/restart
+semantics (an evicted job restarts, never duplicates, never fails).
+"""
+import numpy as np
+import pytest
+
+from repro.core import VLFTJ, count, get_query
+from repro.core import engine as engine_mod
+from repro.graphs import powerlaw_cluster
+from repro.serve import (AdmissionError, PlanSnapshot, Preempted,
+                         QuantumBudget, QuantumScheduler, QueryRequest,
+                         QueryServer, TenantQuota)
+
+TIER1_SHAPES = ["3-clique", "4-clique", "4-cycle", "3-path",
+                "2-lollipop", "3-lollipop"]
+
+
+@pytest.fixture(scope="module")
+def csr():
+    return powerlaw_cluster(n=300, m_per_node=4, seed=0)
+
+
+@pytest.fixture()
+def server(csr):
+    return QueryServer(csr, page_rows=256)
+
+
+def _direct_gdb(server):
+    return server._gdb_for(server.default_selectivity, 0)
+
+
+# ---------------------------------------------------------------------------
+# suspend/resume parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", TIER1_SHAPES)
+def test_count_parity_under_preemption(server, shape):
+    """A tiny quantum forces many suspensions; the count must equal the
+    uninterrupted engine count row-for-row (weighted)."""
+    sched = QuantumScheduler(server, quantum_rows=64)
+    sched.submit(QueryRequest(shape, engine="vlftj"))
+    (res,) = sched.run()
+    ref = count(get_query(shape), _direct_gdb(server), engine="vlftj")
+    assert res.count == ref
+    assert res.stats["quanta"] >= 1
+    assert res.stats["rows_expanded"] > 0
+
+
+@pytest.mark.parametrize("shape", TIER1_SHAPES)
+def test_rows_parity_under_preemption(server, shape):
+    """Enumeration through the scheduler must deliver exactly the rows
+    of uninterrupted enumeration, in the same (GAO-lex) order."""
+    sched = QuantumScheduler(server, quantum_rows=64)
+    sched.submit(QueryRequest(shape, engine="vlftj", limit=10**9))
+    (res,) = sched.run()
+    direct = engine_mod.enumerate(get_query(shape), _direct_gdb(server),
+                                  plan=res.plan, order=res.row_vars)
+    assert res.next_cursor is None          # limit covered everything
+    assert res.count == direct.count()
+    assert np.array_equal(res.rows, direct.rows)
+
+
+def test_preemption_actually_happens(server):
+    sched = QuantumScheduler(server, quantum_rows=64)
+    sched.submit(QueryRequest("3-path", engine="vlftj", limit=10**9))
+    (res,) = sched.run()
+    assert res.stats["preemptions"] > 0
+    assert res.stats["quanta"] == res.stats["preemptions"] + 1
+
+
+def test_limit_completes_early_and_hands_back_cursor(server):
+    sched = QuantumScheduler(server, quantum_rows=10**9)
+    sched.submit(QueryRequest("3-path", engine="vlftj", limit=100))
+    (res,) = sched.run()
+    assert res.count == 100 and res.rows.shape == (100, 4)
+    assert res.next_cursor is not None
+    cont = server.execute(QueryRequest("3-path", limit=10**9,
+                                       cursor=res.next_cursor))
+    direct = engine_mod.enumerate(get_query("3-path"), _direct_gdb(server),
+                                  plan=res.plan, order=res.row_vars)
+    assert np.array_equal(np.concatenate([res.rows, cont.rows]),
+                          direct.rows)
+
+
+# ---------------------------------------------------------------------------
+# the serializable snapshot contract
+# ---------------------------------------------------------------------------
+
+def test_snapshot_bytes_roundtrip():
+    snap = PlanSnapshot("3-path", ("v1", "v2"),
+                        np.arange(8, dtype=np.int32).reshape(4, 2),
+                        np.ones(4, dtype=np.int64), phase="final",
+                        offset=2, partial_total=17, rows_emitted=5)
+    back = PlanSnapshot.from_bytes(snap.to_bytes())
+    assert back.query_name == "3-path" and back.gao == ("v1", "v2")
+    assert back.phase == "final" and back.offset == 2
+    assert back.partial_total == 17 and back.rows_emitted == 5
+    assert np.array_equal(back.frontier, snap.frontier)
+    assert np.array_equal(back.mult, snap.mult)
+    assert back.start_level == 2
+    assert back.nbytes == snap.nbytes
+
+
+@pytest.mark.parametrize("shape", ["3-path", "3-lollipop"])
+def test_resume_count_from_serialized_snapshot(server, shape):
+    """Preempt mid-frontier, serialize, restore, resume on a *fresh*
+    executor: the resumed count equals the uninterrupted count."""
+    gdb = _direct_gdb(server)
+    q = get_query(shape)
+    plan, _ = server._plan_for(QueryRequest(shape, engine="vlftj"), gdb)
+    budget = QuantumBudget(32, shape, plan.gao)
+    ex = VLFTJ(q, gdb, plan=plan.with_level_callback(budget))
+    with pytest.raises(Preempted) as ei:
+        ex.count()
+    wire = ei.value.snapshot.to_bytes()
+    snap = PlanSnapshot.from_bytes(wire)
+    fresh = VLFTJ(q, gdb, plan=plan)
+    assert fresh.resume_count(snap.frontier, snap.mult) == \
+        count(q, gdb, engine="vlftj")
+
+
+def test_resume_rows_from_snapshot_with_skip(server):
+    """The cursor half of the contract: resume from a suspended
+    frontier and skip already-delivered rows — continues row-for-row."""
+    from repro.results import ResultCursor
+    gdb = _direct_gdb(server)
+    q = get_query("3-path")
+    plan, _ = server._plan_for(QueryRequest("3-path", engine="vlftj",
+                                            limit=1), gdb, output="rows")
+    full = VLFTJ(q, gdb, plan=plan)
+    cur = ResultCursor(full, page_rows=128)
+    first = cur.take(300)
+    assert cur.penultimate is not None
+    resumed = ResultCursor(VLFTJ(q, gdb, plan=plan), page_rows=128,
+                           frontier=cur.penultimate,
+                           skip_rows=cur.rows_emitted)
+    rest = np.concatenate(list(resumed)) if not cur.exhausted else \
+        np.zeros((0, 4), dtype=np.int64)
+    direct = VLFTJ(q, gdb, plan=plan).enumerate()
+    assert np.array_equal(np.concatenate([first, rest]), direct)
+    assert resumed.rows_emitted == direct.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def _fair_workload(sched):
+    # heavy: full-graph samples (selectivity=1) make the enumeration
+    # dominate; smalls use the default sparse samples
+    sched.submit(QueryRequest("3-path", engine="vlftj", limit=10**9,
+                              selectivity=1.0), collect_rows=False)
+    for i in range(4):
+        sched.submit(QueryRequest("3-clique", engine="vlftj", seed=i % 2))
+    return sched.run()
+
+
+def test_quantum_meter_deterministic(csr):
+    runs = []
+    for _ in range(2):
+        sched = QuantumScheduler(QueryServer(csr, page_rows=256),
+                                 quantum_rows=2048)
+        res = _fair_workload(sched)
+        runs.append([(r.stats["rows_expanded"], r.stats["vclock_done"],
+                      r.stats["quanta"], r.stats["preemptions"])
+                     for r in res])
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# fairness
+# ---------------------------------------------------------------------------
+
+def test_round_robin_beats_fifo_on_small_query_completion(csr):
+    """With a heavy enumeration in flight, small queries complete at a
+    bounded virtual time under quantum scheduling — and far earlier
+    than under FIFO, at (identically) conserved total work."""
+    outcomes = {}
+    for policy in ("quantum", "fifo"):
+        sched = QuantumScheduler(QueryServer(csr, page_rows=256),
+                                 quantum_rows=2048, policy=policy)
+        res = _fair_workload(sched)
+        heavy, smalls = res[0], res[1:]
+        outcomes[policy] = {
+            "small_done": [r.stats["vclock_done"] for r in smalls],
+            "total": sum(r.stats["rows_expanded"] for r in res),
+            "heavy_work": heavy.stats["rows_expanded"],
+        }
+    q, f = outcomes["quantum"], outcomes["fifo"]
+    # work conservation: suspension repeats no expansion
+    assert q["total"] == f["total"]
+    # FIFO: every small finishes after the whole heavy job
+    assert min(f["small_done"]) > f["heavy_work"]
+    # quantum: p99 (= max here) small completion at least 5x earlier
+    assert max(q["small_done"]) * 5 <= max(f["small_done"])
+
+
+# ---------------------------------------------------------------------------
+# quotas / admission control
+# ---------------------------------------------------------------------------
+
+def test_max_in_flight_rejects_429(server):
+    sched = QuantumScheduler(
+        server, quotas={"t1": TenantQuota(max_in_flight=2)})
+    sched.submit(QueryRequest("3-clique", tenant="t1"))
+    sched.submit(QueryRequest("3-clique", tenant="t1", seed=1))
+    with pytest.raises(AdmissionError) as ei:
+        sched.submit(QueryRequest("3-clique", tenant="t1", seed=2))
+    assert ei.value.status == 429 and ei.value.tenant == "t1"
+    # other tenants are unaffected; completion frees the slot
+    sched.submit(QueryRequest("3-clique", tenant="t2"))
+    sched.run()
+    sched.submit(QueryRequest("3-clique", tenant="t1", seed=2))
+    assert sched.stats["rejected"] == 1
+
+
+def test_frontier_bytes_quota_fails_oversized_park(server):
+    """A suspended frontier larger than the tenant's byte quota cannot
+    park: the job fails mid-flight with a 429-style result."""
+    sched = QuantumScheduler(
+        server, quantum_rows=64,
+        quotas={"t1": TenantQuota(max_frontier_bytes=128)})
+    sched.submit(QueryRequest("3-path", engine="vlftj", tenant="t1"))
+    (res,) = sched.run()
+    assert res.engine == "rejected"
+    assert res.stats["status"] == 429
+    assert "max_frontier_bytes" in res.stats["error"]
+
+
+def test_frontier_bytes_quota_evicts_oldest_parked(server):
+    """Two preempting jobs of one tenant under a quota that fits only
+    one parked frontier: the older parked job is evicted (reason
+    'quota') and restarts, and both still finish correctly."""
+    sched = QuantumScheduler(
+        server, quantum_rows=64,
+        quotas={"t1": TenantQuota(max_frontier_bytes=200_000)})
+    sched.submit(QueryRequest("3-clique", engine="vlftj", tenant="t1"))
+    sched.submit(QueryRequest("4-cycle", engine="vlftj", tenant="t1",
+                              seed=1))
+    res = sched.run()
+    gdb0 = server._gdb_for(server.default_selectivity, 0)
+    gdb1 = server._gdb_for(server.default_selectivity, 1)
+    assert res[0].count == count(get_query("3-clique"), gdb0,
+                                 engine="vlftj")
+    assert res[1].count == count(get_query("4-cycle"), gdb1,
+                                 engine="vlftj")
+    if sched.stats["parked_evictions"]:
+        assert server.cursor_info()["closed"].get("quota", 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# registry eviction / restart semantics
+# ---------------------------------------------------------------------------
+
+def test_evicted_snapshot_restarts_correctly(csr):
+    server = QueryServer(csr, page_rows=256, max_open_cursors=2)
+    sched = QuantumScheduler(server, quantum_rows=64)
+    sched.submit(QueryRequest("3-path", engine="vlftj"))
+    assert sched.step()                    # preempts; snapshot parked
+    assert "sched-1" in server._cursors
+    # pagination traffic floods the LRU registry past its cap
+    for s in range(3):
+        server.execute(QueryRequest("3-clique", engine="vlftj", limit=1,
+                                    seed=s))
+    assert "sched-1" not in server._cursors
+    while sched.step():
+        pass
+    (res,) = [j.result for j in sched._jobs]
+    assert res.stats["restarts"] >= 1
+    assert res.count == count(get_query("3-path"), _direct_gdb(server),
+                              engine="vlftj")
+
+
+def test_evicted_rows_job_never_duplicates(csr):
+    server = QueryServer(csr, page_rows=256, max_open_cursors=2)
+    sched = QuantumScheduler(server, quantum_rows=300)
+    sched.submit(QueryRequest("3-path", engine="vlftj", limit=10**9))
+    job = sched._jobs[0]
+    while job.rows_collected == 0 and job.result is None:
+        assert sched.step()                 # until pages collected + parked
+    assert job.result is None               # still mid-flight
+    for s in range(3):
+        server.execute(QueryRequest("3-clique", engine="vlftj", limit=1,
+                                    seed=s))
+    while sched.step():
+        pass
+    (res,) = [j.result for j in sched._jobs]
+    direct = engine_mod.enumerate(get_query("3-path"),
+                                  _direct_gdb(server),
+                                  plan=res.plan, order=res.row_vars)
+    assert res.stats["restarts"] >= 1
+    assert np.array_equal(res.rows, direct.rows)
+
+
+def test_mutual_eviction_terminates_via_restart_backoff(csr):
+    """Registry smaller than the concurrency level: parked snapshots
+    mutually evict, so every quantum used to restart from scratch —
+    livelock.  Restart backoff (quantum doubles per eviction restart)
+    guarantees convergence; all jobs still return exact counts."""
+    server = QueryServer(csr, page_rows=256, max_open_cursors=1)
+    sched = QuantumScheduler(server, quantum_rows=64)
+    for s in range(3):
+        sched.submit(QueryRequest("3-clique", engine="vlftj", seed=s))
+    for _ in range(400):
+        if not sched.step():
+            break
+    else:
+        pytest.fail("mutual-eviction livelock: no convergence in 400 steps")
+    assert sched.stats["restarts"] > 0
+    for job in sched._jobs:
+        gdb = server._gdb_for(server.default_selectivity, job.req.seed)
+        assert job.result.count == count(get_query("3-clique"), gdb,
+                                         engine="vlftj")
+
+
+# ---------------------------------------------------------------------------
+# non-preemptible engines, server API, stats surface
+# ---------------------------------------------------------------------------
+
+def test_opaque_engine_completes_in_one_quantum(server):
+    sched = QuantumScheduler(server, quantum_rows=64)
+    sched.submit(QueryRequest("3-path", engine="yannakakis"))
+    (res,) = sched.run()
+    assert res.count == count(get_query("3-path"), _direct_gdb(server))
+    assert res.stats["quanta"] == 1 and res.stats["preemptions"] == 0
+
+
+def test_execute_concurrent_positions_and_rejections(server):
+    reqs = [QueryRequest("3-clique", engine="vlftj", tenant="t1"),
+            QueryRequest("3-path", engine="vlftj", limit=50, tenant="t1"),
+            QueryRequest("3-clique", tenant="t1", seed=1)]
+    res = server.execute_concurrent(
+        reqs, quantum_rows=256,
+        quotas={"t1": TenantQuota(max_in_flight=2)})
+    assert len(res) == 3
+    assert res[0].count == count(get_query("3-clique"),
+                                 _direct_gdb(server), engine="vlftj")
+    assert res[1].count == 50 and res[1].rows.shape == (50, 4)
+    assert res[2].engine == "rejected" and res[2].stats["status"] == 429
+
+
+def test_result_stats_surface(server):
+    r = server.execute(QueryRequest("3-clique"))
+    assert r.stats["plan_cache"]["misses"] >= 1
+    assert r.stats["cursors"] == {"open": 0, "closed": {}}
+    r1 = server.execute(QueryRequest("3-path", limit=10))
+    assert r1.stats["cursors"]["open"] == 1
+    r2 = server.execute(QueryRequest("3-path", limit=10**9,
+                                     cursor=r1.next_cursor))
+    assert r2.stats["cursors"]["closed"].get("exhausted") == 1
+    assert r2.stats["cursors"]["open"] == 0
+
+
+def test_budget_chains_inner_callback(server):
+    """The quantum budget composes with an existing level_callback
+    (e.g. the dist rebalancer): the inner hook still runs and its
+    frontier replacement is honoured."""
+    gdb = _direct_gdb(server)
+    q = get_query("3-path")
+    plan, _ = server._plan_for(QueryRequest("3-path", engine="vlftj"),
+                               gdb)
+    calls = []
+
+    def inner(level, frontier, mult):
+        calls.append(level)
+        return frontier[::-1], mult[::-1]   # pure permutation
+
+    budget = QuantumBudget(None, "3-path", plan.gao, inner=inner)
+    ex = VLFTJ(q, gdb, plan=plan.with_level_callback(budget))
+    assert ex.count() == count(q, gdb, engine="vlftj")
+    assert calls and budget.total_rows > 0

@@ -1,0 +1,87 @@
+"""Docs gate: code blocks must import, relative links must resolve.
+
+Two failure modes docs rot into, both cheap to gate in CI:
+
+* a ``python`` fenced block references an API that was renamed or
+  removed — every block is compiled (syntax) and its ``import`` /
+  ``from`` statements are executed (so ``from repro.serve import
+  QuantumScheduler`` fails the build the day the symbol disappears);
+  block bodies are NOT run (doc examples may be long-running);
+* a relative markdown link points at a file that moved — every
+  ``[text](target)`` with a non-URL target must resolve on disk,
+  relative to the file containing it (``#anchors`` and absolute URLs
+  are skipped).
+
+Usage: ``PYTHONPATH=src python tools/check_docs.py [files...]``
+(default: README.md and docs/*.md).  Exit 1 with a per-finding report
+on any failure.
+"""
+from __future__ import annotations
+
+import ast
+import glob
+import re
+import sys
+
+FENCE = re.compile(r"```python[^\n]*\n(.*?)```", re.S)
+# [text](target) — but not ![image](...) captures we care to treat
+# differently, and not reference-style links
+LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_code_blocks(path: str, text: str) -> list[str]:
+    errors: list[str] = []
+    for i, block in enumerate(FENCE.findall(text), 1):
+        where = f"{path}: python block #{i}"
+        try:
+            tree = ast.parse(block)
+        except SyntaxError as e:
+            errors.append(f"{where}: syntax error: {e}")
+            continue
+        imports = [node for node in tree.body
+                   if isinstance(node, (ast.Import, ast.ImportFrom))]
+        if not imports:
+            continue
+        src = "\n".join(ast.unparse(node) for node in imports)
+        try:
+            exec(compile(src, where, "exec"), {})
+        except Exception as e:  # noqa: BLE001 — report any import failure
+            errors.append(f"{where}: import check failed: "
+                          f"{type(e).__name__}: {e}")
+    return errors
+
+
+def check_links(path: str, text: str) -> list[str]:
+    import os
+    errors: list[str] = []
+    base = os.path.dirname(os.path.abspath(path))
+    for target in LINK.findall(text):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            errors.append(f"{path}: dead relative link: {target}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    files = argv or sorted({"README.md", *glob.glob("docs/*.md")})
+    errors: list[str] = []
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        errors += check_code_blocks(path, text)
+        errors += check_links(path, text)
+    for e in errors:
+        print(f"ERROR: {e}")
+    n_files = len(files)
+    print(f"checked {n_files} file(s): "
+          f"{'FAIL' if errors else 'OK'} ({len(errors)} error(s))")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
