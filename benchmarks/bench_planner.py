@@ -11,6 +11,12 @@ Two measurements per query shape:
     over a sample of candidate GAOs; ``costmodel/engines/rank_corr``
     does the same across engine candidates.  Positive correlation means
     cost-based selection is picking better plans than a blind heuristic.
+  * ``qerror/<q>/L<level>`` — per-GAO-level Q-error of the planner's
+    frontier-cardinality estimates against the cardinalities a traced
+    run actually observed (``repro.obs``): ``max(est/obs, obs/est)``,
+    1.0 = perfect.  The per-level breakdown shows *where* the
+    independence assumption loses contact with a skewed graph — the
+    feedback signal the adaptive-re-planning roadmap item consumes.
 
 ``python -m benchmarks.run --only planner`` or import ``run()``;
 ``record_baseline()`` writes ``BENCH_planner.json``.
@@ -93,6 +99,26 @@ def run(quick: bool = True) -> list[Row]:
     rho = _spearman(np.asarray(est), np.asarray(actual))
     rows.append(Row("costmodel/engines/rank_corr", 0.0,
                     f"rho={rho:.3f};n={len(est)}"))
+
+    # -- estimate fidelity: per-level Q-error from traced runs ---------------
+    from repro.obs import QueryTrace
+    from repro.core import execute_stats
+    for qname in CORR_SHAPES:
+        q = get_query(qname)
+        plan = plan_query(q, stats, engine="vlftj")
+        tr = QueryTrace(qname, plan.gao, plan.engine)
+        with tr.activate():
+            execute_stats(plan, gdb)
+        for rec in (tr.levels[lv] for lv in sorted(tr.levels)):
+            qe = rec.get("q_error")
+            if qe is None:
+                continue
+            rows.append(Row(
+                f"qerror/{qname}/L{rec['level']}", 0.0,
+                f"var={rec.get('var')};est={rec.get('est_rows'):.4g};"
+                f"obs={rec.get('obs_rows')};q={qe:.4g}"))
+        mq = tr.max_q_error
+        rows.append(Row(f"qerror/{qname}/max", 0.0, f"q={mq:.4g}"))
 
     # -- end-to-end: served count latency with plan cache --------------------
     cache = PlanCache()

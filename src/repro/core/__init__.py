@@ -1,7 +1,8 @@
 from .agm import agm_bound, fractional_edge_cover
 from .binary_join import BinaryJoin, JoinBlowup, binary_join_count
 from .device_graph import GraphDB, HybridGraphDB
-from .engine import ENGINES, count, execute, pick_engine
+from .engine import (ENGINES, count, execute, execute_stats,
+                     make_engine, pick_engine)
 from .gao import choose_gao
 from .hybrid import HybridJoin, hybrid_count
 from .hypergraph import Hypergraph, all_neos, is_beta_acyclic, is_neo
@@ -21,7 +22,7 @@ from .yannakakis import CountingYannakakis, yannakakis_count
 __all__ = [
     "agm_bound", "fractional_edge_cover", "BinaryJoin", "JoinBlowup",
     "binary_join_count", "GraphDB", "HybridGraphDB", "ENGINES", "count",
-    "execute",
+    "execute", "execute_stats", "make_engine",
     "pick_engine", "choose_gao", "HybridJoin", "hybrid_count",
     "Hypergraph", "all_neos", "is_beta_acyclic", "is_neo", "LFTJ",
     "lftj_count", "Minesweeper", "minesweeper_count", "GraphStats",

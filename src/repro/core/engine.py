@@ -58,23 +58,54 @@ def pick_engine(query: Query, stats: GraphStats | None = None) -> str:
     return "vlftj"
 
 
-def execute(plan: JoinPlan, gdb: GraphDB, **kw) -> int:
-    """Run a compiled plan against a graph and return the count."""
+def make_engine(plan: JoinPlan, gdb: GraphDB, **kw):
+    """Construct a plan's physical operator instance (the single
+    dispatch point shared by ``execute``/``execute_stats``/
+    ``_engine_rows``).  Every instance carries a ``stats`` dict —
+    harvest it through :func:`repro.obs.normalize_engine_stats`."""
     engine = plan.engine
     query = plan.query
     if engine == "vlftj":
-        return VLFTJ(query, gdb, plan=plan, **kw).count()
+        return VLFTJ(query, gdb, plan=plan, **kw)
     if engine == "yannakakis":
-        return CountingYannakakis(query, gdb, plan=plan).count()
+        return CountingYannakakis(query, gdb, plan=plan)
     if engine == "hybrid":
-        return HybridJoin(query, gdb, plan=plan, **kw).count()
+        return HybridJoin(query, gdb, plan=plan, **kw)
     if engine == "lftj_ref":
-        return LFTJ(query, gdb.to_database(), plan=plan).count()
+        return LFTJ(query, gdb.to_database(), plan=plan)
     if engine == "minesweeper_ref":
-        return Minesweeper(query, gdb.to_database(), plan=plan, **kw).count()
+        return Minesweeper(query, gdb.to_database(), plan=plan, **kw)
     if engine == "binary":
-        return BinaryJoin(query, gdb.to_database(), plan=plan, **kw).count()
+        return BinaryJoin(query, gdb.to_database(), plan=plan, **kw)
     raise ValueError(f"unknown engine {engine!r}; options: {ENGINES}")
+
+
+def execute(plan: JoinPlan, gdb: GraphDB, **kw) -> int:
+    """Run a compiled plan against a graph and return the count."""
+    return make_engine(plan, gdb, **kw).count()
+
+
+def execute_stats(plan: JoinPlan, gdb: GraphDB, **kw) -> tuple[int, dict]:
+    """Run a plan and return ``(count, engine_stats)`` with the stats
+    normalized onto the unified schema (``repro.obs.schema``).  When a
+    :class:`repro.obs.QueryTrace` is active in the context, the per-level
+    observations are harvested into it against the plan's
+    ``level_est_rows`` annotation — all host-side dict reads, no new
+    device work."""
+    from ..obs import current_trace, normalize_engine_stats
+    eng = make_engine(plan, gdb, **kw)
+    out = eng.count()
+    stats = normalize_engine_stats(plan.engine, getattr(eng, "stats", None))
+    tr = current_trace()
+    if tr is not None:
+        tr.set_meta(query=plan.query.name, gao=list(plan.gao),
+                    engine=plan.engine)
+        tr.record_engine(stats["raw"], gao=plan.gao,
+                         est_rows=plan.level_est_rows)
+        tr.finish(count=out,
+                  rows_expanded=stats["rows_expanded"],
+                  kernel_dispatches=stats["kernel_dispatches"])
+    return out, stats
 
 
 def _resolve_plan(query: Query, gdb: GraphDB, engine: str,
@@ -120,22 +151,7 @@ def _engine_rows(plan: JoinPlan, gdb: GraphDB, limit: int | None = None,
     Every engine's ``enumerate(limit=)`` follows one contract (int64,
     columns = its ``output_vars``, lex row order, limit truncates after
     ordering), so the limit pushes down uniformly."""
-    engine = plan.engine
-    query = plan.query
-    if engine == "vlftj":
-        eng = VLFTJ(query, gdb, plan=plan, **kw)
-    elif engine == "yannakakis":
-        eng = CountingYannakakis(query, gdb, plan=plan)
-    elif engine == "hybrid":
-        eng = HybridJoin(query, gdb, plan=plan, **kw)
-    elif engine == "lftj_ref":
-        eng = LFTJ(query, gdb.to_database(), plan=plan)
-    elif engine == "minesweeper_ref":
-        eng = Minesweeper(query, gdb.to_database(), plan=plan, **kw)
-    elif engine == "binary":
-        eng = BinaryJoin(query, gdb.to_database(), plan=plan, **kw)
-    else:
-        raise ValueError(f"unknown engine {engine!r}; options: {ENGINES}")
+    eng = make_engine(plan, gdb, **kw)
     return eng.enumerate(limit=limit), eng.output_vars
 
 

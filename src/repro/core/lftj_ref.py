@@ -89,6 +89,12 @@ class LFTJ:
                 self.lower_of[ri].append(li)   # right var bound later
             else:
                 self.upper_of[li].append(ri)   # left var bound later
+        # unified stats namespace (docs/OBSERVABILITY.md): seeks counts
+        # leapfrog seek_lub rounds, rows_expanded the bindings descended
+        # into, level_rows the per-GAO-level binding tallies (the "obs"
+        # side of Q-error) — plain host integer adds in the recursion.
+        self.stats = {"seeks": 0, "rows_expanded": 0,
+                      "level_rows": {}}
 
     # ------------------------------------------------------------------
     def run(self, emit=None) -> int:
@@ -104,6 +110,7 @@ class LFTJ:
                 emit(tuple(binding))
             return 1
         parts = self.level_atoms[level]
+        lv_rows = self.stats["level_rows"]
         lower = 0
         for j in self.lower_of[level]:
             lower = max(lower, binding[j] + 1)
@@ -117,6 +124,7 @@ class LFTJ:
         while True:
             agreed = True
             for ai, _col in parts:
+                self.stats["seeks"] += 1
                 nxt = iters[ai].seek_lub(value)
                 if nxt != value:
                     value = nxt
@@ -137,6 +145,8 @@ class LFTJ:
                     break
             if ok:
                 binding[level] = value
+                self.stats["rows_expanded"] += 1
+                lv_rows[level] = lv_rows.get(level, 0) + 1
                 count += self._join(level + 1, iters, binding, emit)
             for ai in opened:
                 iters[ai].up()

@@ -278,6 +278,10 @@ class JoinPlan:
     root: str | None = None
     est_cost: float = 0.0
     level_costs: tuple[float, ...] = ()
+    #: planner-estimated frontier cardinality after each GAO level binds
+    #: (one entry per level; empty when the engine has no level model).
+    #: The "est" side of per-level Q-error in ``repro.obs.explain``.
+    level_est_rows: tuple[float, ...] = ()
     agm_log2: float | None = None
     stats_fingerprint: str = ""
     output_mode: str = "count"

@@ -338,12 +338,13 @@ def candidate_gaos(query: Query, limit: int = 160) -> list[tuple[str, ...]]:
 # ---------------------------------------------------------------------------
 
 def _safe_estimate(query: Query, gao: tuple[str, ...], stats: GraphStats
-                   ) -> tuple[float, tuple[float, ...]]:
-    """Cost estimate, tolerating non-graph atoms the model cannot price."""
+                   ) -> tuple[float, tuple[float, ...], tuple[float, ...]]:
+    """Cost estimate ``(total, level_costs, level_frontiers)``,
+    tolerating non-graph atoms the model cannot price."""
     try:
-        return estimate_vlftj_cost(query, gao, stats)
+        return _cost_model(query, gao, stats)
     except ValueError:
-        return math.inf, ()
+        return math.inf, (), ()
 
 
 def _agm_log2(query: Query, stats: GraphStats) -> float | None:
@@ -362,22 +363,27 @@ def _plan_vlftj(query: Query, stats: GraphStats,
     # caller pins the GAO (plan-free engine wrappers on hot paths)
     agm = None
     if gao is None:
-        best, best_cost, best_levels = choose_gao(query), math.inf, ()
+        best, best_cost = choose_gao(query), math.inf
+        best_levels, best_fronts = (), ()
         for cand in candidate_gaos(query):
-            cost, levels = _safe_estimate(query, cand, stats)
+            cost, levels, fronts = _safe_estimate(query, cand, stats)
             if cost < best_cost:
-                best, best_cost, best_levels = cand, cost, levels
-        gao, est_cost, level_costs = best, best_cost, best_levels
+                best, best_cost = cand, cost
+                best_levels, best_fronts = levels, fronts
+        gao, est_cost = best, best_cost
+        level_costs, level_fronts = best_levels, best_fronts
         agm = _agm_log2(query, stats)
     else:
         gao = tuple(gao)
-        est_cost, level_costs = _safe_estimate(query, gao, stats)
+        est_cost, level_costs, level_fronts = _safe_estimate(
+            query, gao, stats)
     try:
         layouts = choose_level_layouts(query, gao, stats)
     except ValueError:
         layouts = ()        # non-graph atoms: executor stays array-only
     return JoinPlan(query=query, engine=engine, gao=gao,
                     est_cost=est_cost, level_costs=level_costs,
+                    level_est_rows=level_fronts,
                     agm_log2=agm, level_layouts=layouts,
                     stats_fingerprint=stats.fingerprint())
 
@@ -407,12 +413,13 @@ def _plan_hybrid(query: Query, stats: GraphStats) -> JoinPlan | None:
     tree_cost = estimate_yannakakis_cost(hp.tree_query, stats)
     # seeded core: the tree pass leaves ≈ sel-filtered attachment values
     seed = max(1.0, stats.n_nodes * 0.5)
-    core_cost, level_costs = estimate_vlftj_cost(
+    core_cost, level_costs, level_fronts = _cost_model(
         hp.core_query, hp.core_gao, stats, seed_frontier=seed)
     return JoinPlan(query=query, engine="hybrid", gao=hp.core_gao,
                     decomposition=hp,
                     est_cost=tree_cost + core_cost,
                     level_costs=level_costs,
+                    level_est_rows=level_fronts,
                     agm_log2=_agm_log2(query, stats),
                     level_layouts=choose_level_layouts(
                         hp.core_query, hp.core_gao, stats),
@@ -504,9 +511,10 @@ def plan_query(query: Query, stats: GraphStats, engine: str = "auto",
     if engine == "minesweeper_ref":
         # Minesweeper's GAO must be a NEO when one exists (Prop. 4.2)
         ms_gao = tuple(gao) if gao is not None else choose_gao(query)
-        est, levels = _safe_estimate(query, ms_gao, stats)
+        est, levels, fronts = _safe_estimate(query, ms_gao, stats)
         return JoinPlan(query=query, engine="minesweeper_ref", gao=ms_gao,
                         est_cost=est, level_costs=levels,
+                        level_est_rows=fronts,
                         agm_log2=None if gao is not None
                         else _agm_log2(query, stats),
                         stats_fingerprint=stats.fingerprint())

@@ -23,6 +23,7 @@ LFTJ's bindings, and per-level work is O(probe segment + emitted · log N)
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import jax
@@ -215,9 +216,18 @@ class VLFTJ:
                               else ("array",) * len(self.plan))
         # keep chunk x width under the element budget
         self.chunk_rows = self._chunk_cap
+        # the unified stats namespace (docs/OBSERVABILITY.md): scalar
+        # counters plus per-GAO-level observations — level_rows maps
+        # level -> observed frontier cardinality after it binds (the
+        # "obs" side of Q-error), level_wall_s the host wall time spent
+        # in that level, level_paths the kernel path taken per row
+        # (bitset/tile/bsearch).  All plain host dict writes: tracing
+        # harvests these after the run, so hot loops gain no device work.
         self.stats = {"chunks": 0, "frontier_peak": 0, "candidates": 0,
                       "tile_rows": 0, "bsearch_rows": 0, "bitset_rows": 0,
-                      "ll_compiles": 0, "ll_calls": 0}
+                      "ll_compiles": 0, "ll_calls": 0, "rows_expanded": 0,
+                      "level_rows": {}, "level_wall_s": {},
+                      "level_paths": {}}
         # AOT-compiled final-level executables keyed on frontier geometry
         # (see last_level_extensions) — one compile per shape, then the
         # page loop skips the jitted dispatch path entirely
@@ -323,8 +333,14 @@ class VLFTJ:
         gdb = self.gdb
         indptr, indices = gdb.dev("indptr"), gdb.dev("indices")
         n_levels = len(self.plan) if max_levels is None else max_levels
+        lv_rows = self.stats["level_rows"]
+        lv_wall = self.stats["level_wall_s"]
+        lv_paths = self.stats["level_paths"]
         if frontier is None:
+            t0 = time.perf_counter()
             frontier = self._domain_values(self.plan[0])[:, None]
+            lv_rows[0] = int(frontier.shape[0])
+            lv_wall[0] = round(time.perf_counter() - t0, 6)
         frontier = np.asarray(frontier, dtype=np.int32)
         if mult is None:
             mult = np.ones(frontier.shape[0], dtype=np.int64)
@@ -342,23 +358,35 @@ class VLFTJ:
 
         total = 0
         for level in range(start, n_levels):
+            t_lv = time.perf_counter()
             lp = self.plan[level]
             bitmaps = tuple(gdb.dev(f"bitmap:{u}") for u in lp.unary)
             last = level == n_levels - 1
             last_count = last and count_only
+            self.stats["rows_expanded"] += int(frontier.shape[0])
             if not lp.edge_sources:
                 frontier, mult, add = self._expand_dense(
                     frontier, mult, lp, last_count)
                 total += add
                 if last_count:
+                    lv_rows[level] = int(total)
+                    lv_wall[level] = (lv_wall.get(level, 0.0)
+                                      + round(time.perf_counter() - t_lv, 6))
                     return total
+                lv_rows[level] = int(frontier.shape[0])
+                lv_wall[level] = (lv_wall.get(level, 0.0)
+                                  + round(time.perf_counter() - t_lv, 6))
                 frontier, mult = boundary(level, frontier, mult)
                 continue
             C = frontier.shape[0]
             if C == 0:
+                lv_rows[level] = 0
                 break
             groups = self._bucket(frontier, mult, lp,
                                   layout=self.level_layouts[level])
+            paths = lv_paths.setdefault(level, {})
+            for gfrontier, _, mode in groups:
+                paths[mode] = paths.get(mode, 0) + int(gfrontier.shape[0])
             new_rows, new_vals, new_mult = [], [], []
             for gfrontier, gmult, mode in groups:
                 for s in range(0, gfrontier.shape[0], self.chunk_rows):
@@ -408,6 +436,9 @@ class VLFTJ:
                         new_vals.append(cand[rows, cols])
                         new_mult.append(mchunk[rows])
             if last_count:
+                lv_rows[level] = int(total)
+                lv_wall[level] = (lv_wall.get(level, 0.0)
+                                  + round(time.perf_counter() - t_lv, 6))
                 return total
             frontier = np.concatenate(
                 [np.concatenate(new_rows, 0) if new_rows else
@@ -416,6 +447,11 @@ class VLFTJ:
                   if new_vals else np.zeros((0, 1), np.int32))], axis=1)
             mult = (np.concatenate(new_mult) if new_mult
                     else np.zeros(0, np.int64))
+            # record before the boundary callback: a budget callback may
+            # raise (preemption) and the observation must survive it
+            lv_rows[level] = int(frontier.shape[0])
+            lv_wall[level] = (lv_wall.get(level, 0.0)
+                              + round(time.perf_counter() - t_lv, 6))
             frontier, mult = boundary(level, frontier, mult)
             self.stats["frontier_peak"] = max(self.stats["frontier_peak"],
                                               frontier.shape[0])

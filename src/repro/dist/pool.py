@@ -114,6 +114,7 @@ class WorkerPool:
                 for pid, res, dt in _drain(fn, owned, parts):
                     results[pid] = res
                     part_time[pid] = dt
+            self._observe(part_time, workers, "sequential")
             return results, part_time, time.perf_counter() - t0, "sequential"
         pool_cls = (ProcessPoolExecutor if backend == "process"
                     else ThreadPoolExecutor)
@@ -128,4 +129,15 @@ class WorkerPool:
                 for pid, res, dt in fut.result():
                     results[pid] = res
                     part_time[pid] = dt
+        self._observe(part_time, workers, backend)
         return results, part_time, time.perf_counter() - t0, backend
+
+    @staticmethod
+    def _observe(part_time: dict[int, float],
+                 workers: list[tuple[int, list[int]]], backend: str) -> None:
+        """Record per-worker makespans into the process metrics registry."""
+        from ..obs import get_registry
+        hist = get_registry().histogram("pool_worker_seconds",
+                                        backend=backend)
+        for _w, owned in workers:
+            hist.observe(sum(part_time.get(p, 0.0) for p in owned))

@@ -240,11 +240,32 @@ def sharded_count(query: Query, sgdb: ShardedGraphDB,
         return vals
 
     k = len(levels)
+    # trace hook: per-level exchange deltas (gathers / adjacency values
+    # shipped) become 'exchange' events on the active trace — pure host
+    # counter reads, mirroring what a real interconnect would carry
+    from ..obs import current_trace
+    tr = current_trace()
+
+    def note_level(level: int, rows: int, g0: int, v0: int) -> None:
+        if tr is None:
+            return
+        dg = sgdb.exchange["gathers"] - g0
+        dv = sgdb.exchange["values"] - v0
+        tr.level(level, obs_rows=rows,
+                 var=plan.gao[level] if level < len(plan.gao) else None,
+                 est_rows=(plan.level_est_rows[level]
+                           if level < len(plan.level_est_rows) else None))
+        tr.event("exchange", level=level, gathers=dg, values=dv,
+                 bytes=dv * 8)
+
     frontier = domain(levels[0])[:, None]
+    note_level(0, int(frontier.shape[0]),
+               sgdb.exchange["gathers"], sgdb.exchange["values"])
     if k == 1:
         return int(frontier.shape[0])
     total = 0
     for level in range(1, k):
+        g0, v0 = sgdb.exchange["gathers"], sgdb.exchange["values"]
         lp = levels[level]
         last = level == k - 1
         if frontier.shape[0] == 0:
@@ -252,7 +273,9 @@ def sharded_count(query: Query, sgdb: ShardedGraphDB,
         if not lp.edge_sources:
             vals = domain(lp)
             if last and not lp.lower and not lp.upper:
-                return total + int(frontier.shape[0]) * int(vals.shape[0])
+                add = int(frontier.shape[0]) * int(vals.shape[0])
+                note_level(level, total + add, g0, v0)
+                return total + add
             reps = np.repeat(np.arange(frontier.shape[0]), vals.shape[0])
             cand = np.tile(vals, frontier.shape[0])
             ok = np.ones(cand.shape[0], dtype=bool)
@@ -261,9 +284,11 @@ def sharded_count(query: Query, sgdb: ShardedGraphDB,
             for col in lp.upper:
                 ok &= cand < frontier[reps, col]
             if last:
+                note_level(level, total + int(ok.sum()), g0, v0)
                 return total + int(ok.sum())
             frontier = np.concatenate(
                 [frontier[reps[ok]], cand[ok][:, None]], axis=1)
+            note_level(level, int(frontier.shape[0]), g0, v0)
             continue
         srcs = list(lp.edge_sources)
         out_parts: list[np.ndarray] = []
@@ -302,9 +327,11 @@ def sharded_count(query: Query, sgdb: ShardedGraphDB,
                 out_parts.append(np.concatenate(
                     [chunk[reps[keep]], cand[keep][:, None]], axis=1))
         if last:
+            note_level(level, total, g0, v0)
             return total
         frontier = (np.concatenate(out_parts, axis=0) if out_parts
                     else np.zeros((0, frontier.shape[1] + 1), np.int64))
+        note_level(level, int(frontier.shape[0]), g0, v0)
     return total
 
 

@@ -1,0 +1,30 @@
+"""Observability: query tracing, EXPLAIN ANALYZE, and process metrics.
+
+Three pieces (see ``docs/OBSERVABILITY.md`` for the full walkthrough):
+
+* :class:`QueryTrace` / :func:`current_trace` — one query's span tree
+  keyed by GAO levels: est-vs-observed frontier cardinality + Q-error
+  per level, kernel paths, scheduler preempt/resume/restart events,
+  cross-shard exchange traffic; JSONL export via ``to_jsonl``.
+* :func:`explain_analyze` — run a query under a fresh trace and render
+  the annotated plan tree.
+* :class:`MetricsRegistry` / :func:`get_registry` — process-wide
+  counters/gauges/histograms with labels, snapshotted by
+  ``QueryServer.metrics()``.
+
+Everything records host-resident numbers only: tracing and metrics add
+zero device dispatches (guarded by ``tests/test_obs.py``).
+"""
+from .explain import ExplainResult, explain_analyze
+from .metrics import (Counter, DEFAULT_BUCKETS, Gauge, Histogram,
+                      MetricsRegistry, get_registry)
+from .schema import ENGINE_REQUIRED_KEYS, normalize_engine_stats
+from .trace import (NULL_TRACE, NullTrace, QueryTrace, TRACE_SCHEMA_VERSION,
+                    current_trace, qerror)
+
+__all__ = [
+    "Counter", "DEFAULT_BUCKETS", "ENGINE_REQUIRED_KEYS", "ExplainResult",
+    "Gauge", "Histogram", "MetricsRegistry", "NULL_TRACE", "NullTrace",
+    "QueryTrace", "TRACE_SCHEMA_VERSION", "current_trace",
+    "explain_analyze", "get_registry", "normalize_engine_stats", "qerror",
+]

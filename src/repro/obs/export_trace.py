@@ -1,0 +1,65 @@
+"""Export a JSONL query trace — the CI bench-smoke trace artifact.
+
+Runs one paper query (default: the 3-path) on a small synthetic
+Zipf-degree graph under EXPLAIN ANALYZE, verifies count parity against
+an untraced run of the same plan, and writes the trace as JSONL::
+
+    PYTHONPATH=src python -m repro.obs.export_trace \\
+        --query 3-path --out trace_3path.jsonl
+
+The artifact lets CI diff per-level est-vs-observed cardinalities (and
+kernel-path mix) across commits; the line schema is documented in
+``docs/OBSERVABILITY.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from ..core import GraphDB, execute, get_query
+from ..graphs import node_sample
+from ..graphs.generators import zipf_graph
+from .explain import explain_analyze
+
+
+def trace_gdb(n: int = 2000, m: int = 8000, seed: int = 0,
+              selectivity: float = 8.0) -> GraphDB:
+    """The small Zipf-skewed graph the trace artifact is produced on."""
+    g = zipf_graph(n, m, seed=seed)
+    unary = {f"v{i}": node_sample(g.n_nodes, selectivity, seed=17 * i + 1)
+             for i in range(1, 5)}
+    return GraphDB(g, unary)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--query", default="3-path",
+                    help="paper query name (default: 3-path)")
+    ap.add_argument("--engine", default="vlftj",
+                    help="physical engine (default: vlftj — the "
+                         "level-structured executor, so the trace "
+                         "carries per-level est/obs cardinalities)")
+    ap.add_argument("--out", default="trace.jsonl",
+                    help="JSONL output path")
+    ap.add_argument("--n", type=int, default=2000, help="graph nodes")
+    ap.add_argument("--m", type=int, default=8000, help="graph edges")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    gdb = trace_gdb(args.n, args.m, seed=args.seed)
+    query = get_query(args.query)
+    res = explain_analyze(query, gdb, engine=args.engine)
+    untraced = execute(res.plan, gdb)
+    if untraced != res.count:
+        print(f"PARITY FAILURE: traced={res.count} untraced={untraced}",
+              file=sys.stderr)
+        return 1
+    res.trace.to_jsonl(args.out)
+    print(res.render())
+    print(f"trace ({len(res.trace.levels)} levels, "
+          f"{len(res.trace.events)} events) -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,66 @@
+"""The unified ``QueryResult.stats`` engine namespace.
+
+Each engine historically grew its own counter names (``ll_calls``,
+``bitset_rows``, ``spmvs``, ``probes``, …).  Those raw names survive —
+benches and tests key on them — but every engine path now *also* emits
+one documented core schema, produced by :func:`normalize_engine_stats`
+and carried under ``stats["engine"]`` in server results:
+
+==================  =====================================================
+key                 meaning
+==================  =====================================================
+``name``            the physical operator that ran ('vlftj', …)
+``rows_expanded``   partial bindings fed into level expansion (the
+                    quantum scheduler's work unit)
+``frontier_peak``   largest materialized frontier (rows)
+``kernel_dispatches``  device kernel launches (vlftj ``chunks``;
+                    host-only engines report 0)
+``jit_calls``       final-level executable invocations (``ll_calls``)
+``jit_compiles``    final-level AOT compiles (``ll_compiles``) — calls
+                    minus compiles is the jit-cache hit count
+``level_rows``      GAO level -> observed frontier cardinality (the
+                    "obs" side of per-level Q-error)
+``level_wall_s``    GAO level -> host wall seconds spent in the level
+``level_paths``     GAO level -> kernel path row tallies
+                    ({'bitset'|'tile'|'bsearch': rows})
+``raw``             the engine's native counters, untouched
+==================  =====================================================
+
+``tests/test_obs.py`` asserts every engine path emits every
+``ENGINE_REQUIRED_KEYS`` entry; the full catalog (including the
+scheduler / dist / cursor groups) is ``docs/OBSERVABILITY.md``.
+"""
+from __future__ import annotations
+
+#: every normalized engine-stats dict carries exactly these keys.
+ENGINE_REQUIRED_KEYS = ("name", "rows_expanded", "frontier_peak",
+                        "kernel_dispatches", "jit_calls", "jit_compiles",
+                        "level_rows", "level_wall_s", "level_paths", "raw")
+
+
+def normalize_engine_stats(name: str, stats: dict | None) -> dict:
+    """Project an engine's native ``stats`` dict onto the unified schema.
+
+    Total: every engine (including one with no native stats at all) maps
+    to a dict with all :data:`ENGINE_REQUIRED_KEYS`; native counters
+    survive under ``raw``.
+    """
+    raw = dict(stats or {})
+    return {
+        "name": name,
+        "rows_expanded": int(raw.get("rows_expanded", 0)),
+        "frontier_peak": int(raw.get("frontier_peak",
+                                     raw.get("max_intermediate", 0))),
+        "kernel_dispatches": int(raw.get("chunks", 0)),
+        "jit_calls": int(raw.get("ll_calls", 0)),
+        "jit_compiles": int(raw.get("ll_compiles", 0)),
+        "level_rows": {int(k): int(v)
+                       for k, v in (raw.get("level_rows") or {}).items()},
+        "level_wall_s": {int(k): float(v)
+                         for k, v in (raw.get("level_wall_s")
+                                      or {}).items()},
+        "level_paths": {int(k): dict(v)
+                        for k, v in (raw.get("level_paths")
+                                     or {}).items()},
+        "raw": raw,
+    }

@@ -97,6 +97,10 @@ class ResultCursor:
                  skip_rows: int = 0):
         if page_rows < 1:
             raise ValueError("page_rows must be >= 1")
+        #: the live VLFTJ this cursor streams from (None for wrapped
+        #: sources) — its ``stats`` carry the kernel counters a trace or
+        #: metrics snapshot harvests after paging
+        self.executor: VLFTJ | None = executor
         self.vars = executor.gao
         self.page_rows = page_rows
         self.stats = {"pages": 0, "rows": 0, "chunks": 0, "count_chunks": 0,
@@ -122,6 +126,7 @@ class ResultCursor:
                     page_rows: int = 1024) -> "ResultCursor":
         """Cursor over an iterable of row blocks already in lex order."""
         cur = cls.__new__(cls)
+        cur.executor = None
         cur.vars = tuple(columns)
         cur.page_rows = page_rows
         cur.stats = {"pages": 0, "rows": 0, "chunks": 0, "count_chunks": 0,

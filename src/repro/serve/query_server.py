@@ -37,10 +37,11 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core import GraphDB, GraphStats, JoinPlan, PlanCache, execute, \
-    get_query
+from ..core import GraphDB, GraphStats, JoinPlan, PlanCache, get_query
 from ..core import engine as engine_mod
 from ..graphs import CSRGraph, node_sample
+from ..obs import MetricsRegistry, QueryTrace, get_registry, \
+    normalize_engine_stats
 from ..results import ResultCursor
 
 
@@ -68,6 +69,11 @@ class QueryRequest:
     limit: int | None = None
     cursor: str | None = None
     tenant: str = "default"
+    #: record a :class:`repro.obs.QueryTrace` for this request — per-level
+    #: est/obs cardinality, scheduler and exchange events — returned as
+    #: ``QueryResult.trace``.  Off by default: a disabled tracer costs
+    #: nothing (``tests/test_obs.py`` guards zero extra device dispatches).
+    trace: bool = False
 
     @property
     def wants_rows(self) -> bool:
@@ -79,9 +85,16 @@ class QueryResult:
     """One response: the count (or page-row count), the engine label
     that actually ran, and observability in ``stats`` — always the
     server's ``plan_cache`` hit/miss counters and cursor-registry state
-    (open cursors + closed-token reason tallies), plus scheduling
-    counters (``quanta``/``preemptions``/``rows_expanded``/…) when the
-    result came through the quantum scheduler."""
+    (open cursors + closed-token reason tallies); direct (unscheduled)
+    count responses add ``stats["engine"]``, the unified per-engine
+    schema
+    (:data:`repro.obs.ENGINE_REQUIRED_KEYS` — rows expanded, kernel
+    dispatches, jit calls/compiles, per-level rows/wall/paths, with the
+    engine's native counters under ``raw``); scheduled results add the
+    scheduling counters (``quanta``/``preemptions``/``restarts``/
+    ``rows_expanded``/``quantum_rows_initial``/``quantum_rows_final``/
+    ``vclock_*``).  The full key namespace is documented in
+    ``docs/OBSERVABILITY.md``."""
 
     request: QueryRequest
     count: int
@@ -96,6 +109,9 @@ class QueryResult:
     row_vars: tuple[str, ...] | None = None
     next_cursor: str | None = field(default=None)
     stats: dict = field(default_factory=dict)
+    #: the request's :class:`repro.obs.QueryTrace` when ``req.trace`` was
+    #: set (export with ``trace.to_jsonl()``); None otherwise.
+    trace: QueryTrace | None = None
 
 
 class QueryServer:
@@ -103,8 +119,15 @@ class QueryServer:
                  plan_cache_size: int = 256,
                  dist_edge_threshold: int | None = 1 << 22,
                  dist_workers: int = 4, dist_granularity: int = 2,
-                 page_rows: int = 1024, max_open_cursors: int = 64):
+                 page_rows: int = 1024, max_open_cursors: int = 64,
+                 metrics: MetricsRegistry | None = None):
         self.csr = csr
+        # process metrics: plan-cache traffic, cursor closes by reason,
+        # scheduler quanta, pool makespans — one registry, snapshotted by
+        # metrics().  Default: the process-wide registry; pass a private
+        # MetricsRegistry for isolation.
+        self.metrics_registry = metrics if metrics is not None \
+            else get_registry()
         self.default_selectivity = default_selectivity
         self._warm: dict = {}
         self._stats: dict = {}
@@ -140,6 +163,8 @@ class QueryServer:
         self._cursors.pop(token, None)
         self._closed[token] = reason
         self._close_reasons[reason] = self._close_reasons.get(reason, 0) + 1
+        self.metrics_registry.counter("server_cursor_closed",
+                                      reason=reason).inc()
         while len(self._closed) > 4 * self.max_open_cursors:
             self._closed.popitem(last=False)
 
@@ -164,9 +189,24 @@ class QueryServer:
         return {"open": len(self._cursors),
                 "closed": dict(self._close_reasons)}
 
-    def _result_stats(self) -> dict:
-        return {"plan_cache": self.plan_cache_info(),
-                "cursors": self.cursor_info()}
+    def _result_stats(self, engine_stats: dict | None = None) -> dict:
+        out = {"plan_cache": self.plan_cache_info(),
+               "cursors": self.cursor_info()}
+        if engine_stats is not None:
+            out["engine"] = engine_stats
+        return out
+
+    def metrics(self) -> dict:
+        """Snapshot of the server's :class:`~repro.obs.MetricsRegistry`:
+        every counter/gauge/histogram series as ``"name{labels}" ->
+        value`` (the full catalog is docs/OBSERVABILITY.md).  Level
+        gauges (open cursors, plan-cache size) are refreshed here, so a
+        snapshot is always current."""
+        reg = self.metrics_registry
+        reg.gauge("server_open_cursors").set(len(self._cursors))
+        reg.gauge("server_plan_cache_size").set(len(self.plan_cache))
+        reg.counter("server_metrics_snapshots").inc()
+        return reg.snapshot()
 
     def _routes_to_dist(self, plan: JoinPlan, gdb: GraphDB) -> bool:
         return (self.dist_edge_threshold is not None
@@ -192,14 +232,17 @@ class QueryServer:
         return pj
 
     def _execute_plan(self, plan: JoinPlan, gdb: GraphDB,
-                      req: QueryRequest) -> tuple[int, str]:
-        """(count, engine label); large graphs take the partitioned path."""
+                      req: QueryRequest) -> tuple[int, str, dict]:
+        """(count, engine label, normalized engine stats); large graphs
+        take the partitioned path."""
         if self._routes_to_dist(plan, gdb):
             pj = self._dist_join_for(plan, gdb, req)
             c = pj.count()
             self.last_dist_stats = pj.stats
-            return c, plan.engine + "+partitioned"
-        return execute(plan, gdb), plan.engine
+            label = plan.engine + "+partitioned"
+            return c, label, normalize_engine_stats(label, pj.stats)
+        c, stats = engine_mod.execute_stats(plan, gdb)
+        return c, plan.engine, stats
 
     def _gdb_for(self, selectivity: float, seed: int) -> GraphDB:
         key = (round(selectivity, 6), seed)
@@ -224,7 +267,10 @@ class QueryServer:
         hits_before = self.plan_cache.hits
         plan = self.plan_cache.get_or_plan(q, stats, req.engine,
                                            output=output)
-        return plan, self.plan_cache.hits > hits_before
+        hit = self.plan_cache.hits > hits_before
+        self.metrics_registry.counter(
+            "server_plan_cache", outcome="hit" if hit else "miss").inc()
+        return plan, hit
 
     def plan_cache_info(self) -> dict:
         return {"hits": self.plan_cache.hits,
@@ -323,10 +369,19 @@ class QueryServer:
             return self._rows_result(req, cur, label, plan, cached,
                                      None, t0)
         plan, cached = self._plan_for(req, gdb)
-        c, label = self._execute_plan(plan, gdb, req)
+        if req.trace:
+            tr = QueryTrace(req.query_name, plan.gao, plan.engine)
+            with tr.activate():
+                c, label, estats = self._execute_plan(plan, gdb, req)
+            tr.set_meta(engine=label, tenant=req.tenant,
+                        plan_cached=cached)
+            return QueryResult(req, c, label, time.time() - t0,
+                               plan=plan, plan_cached=cached,
+                               stats=self._result_stats(estats), trace=tr)
+        c, label, estats = self._execute_plan(plan, gdb, req)
         return QueryResult(req, c, label, time.time() - t0,
                            plan=plan, plan_cached=cached,
-                           stats=self._result_stats())
+                           stats=self._result_stats(estats))
 
     def execute_batch(self, reqs: list[QueryRequest]) -> list[QueryResult]:
         """Run a batch sequentially, sorted by (selectivity, seed) so
@@ -402,12 +457,12 @@ class QueryServer:
                         reqs[i], cur, label, plan, cached, None,
                         t0 - plan_s)
                     continue
-                c, label = self._execute_plan(plan, gdb, reqs[i])
+                c, label, estats = self._execute_plan(plan, gdb, reqs[i])
                 # latency_s matches execute(): planning share + execution
                 results[i] = QueryResult(
                     reqs[i], c, label, plan_s + time.time() - t0,
                     plan=plan, plan_cached=cached,
-                    stats=self._result_stats())
+                    stats=self._result_stats(estats))
         return results  # type: ignore
 
     def execute_concurrent(self, reqs: list[QueryRequest],

@@ -37,6 +37,7 @@ row-for-row suspend/resume parity on every tier-1 query shape.
 """
 from __future__ import annotations
 
+import contextlib
 import io
 import json
 import struct
@@ -48,6 +49,7 @@ import numpy as np
 
 from ..core import VLFTJ, get_query
 from ..core.plan import pow2ceil
+from ..obs import QueryTrace
 from ..results import ResultCursor
 from .query_server import QueryRequest, QueryResult, QueryServer
 
@@ -215,7 +217,7 @@ class _Job:
                  "budget", "executor", "window", "collect_rows", "pages",
                  "rows_collected", "quanta", "preemptions", "restarts",
                  "parked_nbytes", "t_submit", "vclock_submit", "result",
-                 "seq")
+                 "seq", "trace", "quantum_rows_initial")
 
     def __init__(self, jid: int, req: QueryRequest, plan, gdb, label,
                  budget: QuantumBudget, collect_rows: bool, vclock: int):
@@ -239,6 +241,13 @@ class _Job:
         self.t_submit = time.time()
         self.vclock_submit = vclock
         self.result: QueryResult | None = None
+        # per-job trace (req.trace): preempt/resume/restart events land
+        # here; the restart-backoff quantum growth is visible both as
+        # events and in the result stats (quantum_rows_initial/_final)
+        self.trace: QueryTrace | None = (
+            QueryTrace(req.query_name, plan.gao, plan.engine)
+            if req.trace else None)
+        self.quantum_rows_initial = budget.quantum_rows
 
 
 # ---------------------------------------------------------------------------
@@ -409,6 +418,14 @@ class QuantumScheduler:
                 # per restart grows geometrically and the job finishes
                 # within one slice after O(log(total work)) restarts.
                 job.budget.quantum_rows *= 2
+            # the backoff growth is caller-visible: a restart event on
+            # the job's trace plus quantum_rows_final in result stats
+            self.server.metrics_registry.counter(
+                "scheduler_restarts", reason=reason).inc()
+            if job.trace is not None:
+                job.trace.event("restart", reason=reason,
+                                quantum_rows=job.budget.quantum_rows,
+                                rows_lost=job.budget.total_rows)
         return None
 
     # -- execution -----------------------------------------------------------
@@ -431,17 +448,36 @@ class QuantumScheduler:
                 next_cursor: str | None = None) -> None:
         self._in_flight[job.tenant] -= 1
         self.stats["completed"] += 1
+        trace = job.trace
+        if trace is not None:
+            if job.executor is not None:
+                trace.record_engine(job.executor.stats, gao=job.plan.gao,
+                                    est_rows=job.plan.level_est_rows)
+                if job.req.limit is None and len(job.plan.gao):
+                    # the scheduler drives the final level itself
+                    # (windowed tallies), so the engine's level_rows
+                    # stops at the penultimate level — close it here
+                    trace.level(len(job.plan.gao) - 1, obs_rows=count)
+            trace.finish(count=count, quanta=job.quanta,
+                         preemptions=job.preemptions,
+                         restarts=job.restarts,
+                         rows_expanded=job.budget.total_rows)
         job.result = QueryResult(
             job.req, count, job.label, time.time() - job.t_submit,
             plan=job.plan, rows=rows,
             row_vars=job.plan.gao if rows is not None else None,
-            next_cursor=next_cursor,
+            next_cursor=next_cursor, trace=trace,
             stats={"quanta": job.quanta, "preemptions": job.preemptions,
                    "restarts": job.restarts,
                    "rows_expanded": job.budget.total_rows,
                    "vclock_submit": job.vclock_submit,
                    "vclock_done": self.vclock,
-                   "policy": self.policy})
+                   "policy": self.policy,
+                   # restart-backoff visibility (doubles per eviction
+                   # restart in _unpark): final == initial iff no
+                   # eviction restart grew the quantum
+                   "quantum_rows_initial": job.quantum_rows_initial,
+                   "quantum_rows_final": job.budget.quantum_rows})
 
     def _finish_rejected(self, job: _Job, reason: str) -> None:
         self._in_flight[job.tenant] -= 1
@@ -467,13 +503,25 @@ class QuantumScheduler:
             return True
         job.quanta += 1
         self.stats["quanta"] += 1
+        self.server.metrics_registry.counter("scheduler_quanta").inc()
         job.budget.refill()
         before = job.budget.total_rows
+        ctx = (job.trace.activate() if job.trace is not None
+               else contextlib.nullcontext())
         try:
-            done = self._advance(job)
+            with ctx:
+                done = self._advance(job)
         except Preempted as p:
             job.preemptions += 1
             self.stats["preemptions"] += 1
+            self.server.metrics_registry.counter(
+                "scheduler_preemptions").inc()
+            if job.trace is not None:
+                job.trace.event(
+                    "preempt", level=p.snapshot.start_level,
+                    frontier_rows=int(p.snapshot.frontier.shape[0]),
+                    quantum=job.quanta,
+                    rows_expanded=job.budget.total_rows)
             self._park(job, p.snapshot)
             done = False
         self.vclock += job.budget.total_rows - before
@@ -501,6 +549,15 @@ class QuantumScheduler:
             return self._run_opaque(job)
         ex = self._executor(job)
         k = len(ex.plan)
+        if job.trace is not None and state is not None:
+            if isinstance(state, PlanSnapshot):
+                job.trace.event("resume", phase=state.phase,
+                                level=state.start_level,
+                                frontier_rows=int(state.frontier.shape[0]),
+                                quantum=job.quanta)
+            else:
+                job.trace.event("resume", phase="rows", quantum=job.quanta,
+                                rows_emitted=job.rows_collected)
         if job.req.limit is not None:
             return self._advance_rows(job, ex, state)
         # counting job: build the penultimate frontier (preemptible at
@@ -527,6 +584,13 @@ class QuantumScheduler:
                     and job.budget.consumed >= job.budget.quantum_rows:
                 job.preemptions += 1
                 self.stats["preemptions"] += 1
+                self.server.metrics_registry.counter(
+                    "scheduler_preemptions").inc()
+                if job.trace is not None:
+                    job.trace.event("preempt", level=len(ex.plan),
+                                    phase="final", offset=snap.offset,
+                                    quantum=job.quanta,
+                                    rows_expanded=job.budget.total_rows)
                 self._park(job, snap)
                 return False
             real = min(job.window, F - snap.offset)
@@ -579,6 +643,13 @@ class QuantumScheduler:
                     and job.budget.consumed >= job.budget.quantum_rows:
                 job.preemptions += 1
                 self.stats["preemptions"] += 1
+                self.server.metrics_registry.counter(
+                    "scheduler_preemptions").inc()
+                if job.trace is not None:
+                    job.trace.event("preempt", phase="rows",
+                                    rows_emitted=job.rows_collected,
+                                    quantum=job.quanta,
+                                    rows_expanded=job.budget.total_rows)
                 self._park(job, cur)
                 return False
         rows = None
@@ -612,7 +683,8 @@ class QuantumScheduler:
                          rows=rows if job.collect_rows else None,
                          next_cursor=next_cursor)
             return True
-        c, label = self.server._execute_plan(job.plan, job.gdb, job.req)
+        c, label, _estats = self.server._execute_plan(job.plan, job.gdb,
+                                                      job.req)
         job.label = label
         self._finish(job, c)
         return True
