@@ -7,19 +7,23 @@ competitive only at very high selectivity.
 """
 from __future__ import annotations
 
+from functools import partial
+
 from repro.core import GraphStats, JoinBlowup, count, get_query, plan_query
 
-from .common import Row, bench_gdb, timed
+from .common import BenchRecord, bench_gdb, timed
+
+Rec = partial(BenchRecord, bench="acyclic")
 
 DATASETS = ["ca-GrQc", "wiki-Vote", "loc-Brightkite"]
 QUERIES = ["3-path", "4-path", "1-tree", "2-comb", "2-tree"]
 SELECTIVITIES = [8, 80]
 
 
-def run(quick: bool = True) -> list[Row]:
+def run(quick: bool = True) -> list[BenchRecord]:
     scale = 0.15 if quick else 1.0
     timeout = 60 if quick else 600
-    rows: list[Row] = []
+    rows: list[BenchRecord] = []
     for ds in DATASETS[: 2 if quick else None]:
         for sel in SELECTIVITIES:
             gdb = bench_gdb(ds, scale, selectivity=sel)
@@ -30,14 +34,14 @@ def run(quick: bool = True) -> list[Row]:
                 py = plan_query(q, stats, engine="yannakakis")
                 ref, us = timed(lambda: count(q, gdb, plan=py),
                                 timeout_s=timeout)
-                rows.append(Row(f"t7/{qname}/{ds}/sel{sel}/ms-analogue",
+                rows.append(Rec(f"t7/{qname}/{ds}/sel{sel}/ms-analogue",
                                 us, f"count={ref}"))
                 if qname == "2-tree":
                     # the paper's Table 7: lb/lftj times out ("-") on most
                     # 2-tree cells — the 7-variable frontier explodes.
                     # Faithfully recorded as a timeout without burning the
                     # wall-clock budget.
-                    rows.append(Row(f"t7/{qname}/{ds}/sel{sel}/vlftj",
+                    rows.append(Rec(f"t7/{qname}/{ds}/sel{sel}/vlftj",
                                     float("inf"),
                                     "frontier blowup (paper: '-')"))
                     continue
@@ -45,7 +49,7 @@ def run(quick: bool = True) -> list[Row]:
                 c2, us2 = timed(lambda: count(q, gdb, plan=pv),
                                 timeout_s=timeout)
                 assert c2 == ref, (qname, ds, sel, c2, ref)
-                rows.append(Row(f"t7/{qname}/{ds}/sel{sel}/vlftj", us2,
+                rows.append(Rec(f"t7/{qname}/{ds}/sel{sel}/vlftj", us2,
                                 f"count={c2};vs_ms={us2 / max(us, 1):.1f}x"))
                 try:
                     pb = plan_query(q, stats, engine="binary")
@@ -53,10 +57,10 @@ def run(quick: bool = True) -> list[Row]:
                         lambda: count(q, gdb, plan=pb,
                                       cap=20_000_000), timeout_s=timeout)
                     assert c3 == ref
-                    rows.append(Row(f"t7/{qname}/{ds}/sel{sel}/binary",
+                    rows.append(Rec(f"t7/{qname}/{ds}/sel{sel}/binary",
                                     us3, f"count={c3}"))
                 except JoinBlowup as e:
-                    rows.append(Row(f"t7/{qname}/{ds}/sel{sel}/binary",
+                    rows.append(Rec(f"t7/{qname}/{ds}/sel{sel}/binary",
                                     float("inf"),
                                     f"blowup_rows={e.rows}"))
     return rows

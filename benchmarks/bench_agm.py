@@ -7,13 +7,17 @@ runtime guarantee is measured against.
 """
 from __future__ import annotations
 
+from functools import partial
+
 from repro.core import count, fractional_edge_cover, get_query
 
-from .common import Row, bench_gdb, timed
+from .common import BenchRecord, bench_gdb, timed
+
+Rec = partial(BenchRecord, bench="agm")
 
 
-def run(quick: bool = True) -> list[Row]:
-    rows: list[Row] = []
+def run(quick: bool = True) -> list[BenchRecord]:
+    rows: list[BenchRecord] = []
     gdb = bench_gdb("ca-GrQc", 0.25 if quick else 1.0, selectivity=8)
     sizes = gdb.to_database().sizes()
     for qname in ["3-clique", "4-clique", "4-cycle", "3-path", "4-path",
@@ -23,7 +27,7 @@ def run(quick: bool = True) -> list[Row]:
         bound = 2.0 ** log2b
         c = count(q, gdb, engine="auto")
         assert c <= bound * 1.0000001, (qname, c, bound)
-        rows.append(Row(f"agm/{qname}", us,
+        rows.append(Rec(f"agm/{qname}", us,
                         f"bound={bound:.3g};count={c};"
                         f"cover={','.join(f'{v:.2f}' for v in x)}"))
     return rows

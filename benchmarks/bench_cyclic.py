@@ -6,18 +6,22 @@ timeouts in Table 6 are our ``JoinBlowup``/timeout entries).
 """
 from __future__ import annotations
 
+from functools import partial
+
 from repro.core import GraphStats, JoinBlowup, count, get_query, plan_query
 
-from .common import Row, bench_gdb, timed
+from .common import BenchRecord, bench_gdb, timed
+
+Rec = partial(BenchRecord, bench="cyclic")
 
 DATASETS = ["ca-GrQc", "wiki-Vote", "ego-Facebook", "p2p-Gnutella04"]
 QUERIES = ["3-clique", "4-clique", "4-cycle"]
 
 
-def run(quick: bool = True) -> list[Row]:
+def run(quick: bool = True) -> list[BenchRecord]:
     scale = 0.25 if quick else 1.0
     timeout = 60 if quick else 600
-    rows: list[Row] = []
+    rows: list[BenchRecord] = []
     for ds in DATASETS:
         gdb = bench_gdb(ds, scale)
         m = gdb.csr.n_edges // 2
@@ -31,23 +35,23 @@ def run(quick: bool = True) -> list[Row]:
             ph = plan_query(q, stats, engine="hybrid")
             ref, us = timed(lambda: count(q, gdb, plan=pv),
                             timeout_s=timeout)
-            rows.append(Row(f"t6/{qname}/{ds}/vlftj", us,
+            rows.append(Rec(f"t6/{qname}/{ds}/vlftj", us,
                             f"count={ref};edges={m}"))
             try:
                 c2, us2 = timed(
                     lambda: count(q, gdb, plan=pb,
                                   cap=20_000_000), timeout_s=timeout)
                 assert c2 == ref, (qname, ds, c2, ref)
-                rows.append(Row(f"t6/{qname}/{ds}/binary", us2,
+                rows.append(Rec(f"t6/{qname}/{ds}/binary", us2,
                                 f"count={c2};slowdown="
                                 f"{us2 / max(us, 1):.1f}x"))
             except JoinBlowup as e:
-                rows.append(Row(f"t6/{qname}/{ds}/binary", float("inf"),
+                rows.append(Rec(f"t6/{qname}/{ds}/binary", float("inf"),
                                 f"blowup_rows={e.rows}"))
             # Minesweeper analogue on cyclic = hybrid (Idea 7 skeleton)
             c3, us3 = timed(lambda: count(q, gdb, plan=ph),
                             timeout_s=timeout)
             assert c3 == ref
-            rows.append(Row(f"t6/{qname}/{ds}/hybrid", us3,
+            rows.append(Rec(f"t6/{qname}/{ds}/hybrid", us3,
                             f"count={c3}"))
     return rows

@@ -34,6 +34,7 @@ runs only the skew section (fast inner loop for re-balancer work).
 """
 import os
 import sys
+from functools import partial
 
 if "jax" not in sys.modules and "--xla_force_host_platform_device_count" \
         not in os.environ.get("XLA_FLAGS", ""):
@@ -63,7 +64,9 @@ from repro.graphs import node_sample, powerlaw_cluster, zipf_graph
 from repro.models.transformer import TransformerConfig, init_params, loss_fn
 from repro.train.optimizer import OptimizerConfig, init_opt_state
 
-from .common import Row, timed
+from .common import BenchRecord, timed
+
+Rec = partial(BenchRecord, bench="dist")
 
 
 def _mesh(n_shards: int) -> Mesh:
@@ -81,8 +84,8 @@ def _triangle_frontier(g, pad_to: int):
     return fr, mult
 
 
-def _join_rows(quick: bool) -> list[Row]:
-    rows: list[Row] = []
+def _join_rows(quick: bool) -> list[BenchRecord]:
+    rows: list[BenchRecord] = []
     g = powerlaw_cluster(1200 if quick else 4000, 6, seed=0)
     gdb = GraphDB(g, {})
     n_dev = jax.device_count()
@@ -99,7 +102,7 @@ def _join_rows(quick: bool) -> list[Row]:
         assert total == ref, (total, ref)
         _, us = timed(lambda: int(step(*args)), repeats=5, timeout_s=120)
         rps = len(fr) / (us / 1e6)
-        rows.append(Row(f"join/{shards}shard", us,
+        rows.append(Rec(f"join/{shards}shard", us,
                         f"rows={len(fr)};rows_per_s={rps:.0f};"
                         f"triangles={total}"))
     return rows
@@ -111,7 +114,7 @@ SHARDED_CSR_QUERIES = ("3-clique", "4-clique", "4-cycle", "3-path",
                        "2-lollipop", "3-lollipop")
 
 
-def _skew_rows(quick: bool) -> list[Row]:
+def _skew_rows(quick: bool) -> list[BenchRecord]:
     """Static vs mid-join-rebalanced makespan on a Zipf 3-path.
 
     The workload is the regime where mid-join skew is real: *selective*
@@ -154,7 +157,7 @@ def _skew_rows(quick: bool) -> list[Row]:
     rows = []
     for label in ("static", "rebalanced"):
         st, cnt = runs[label]
-        rows.append(Row(
+        rows.append(Rec(
             f"skew/{label}", st["makespan"] * 1e6,
             f"count={cnt};shards={SKEW_SHARDS};"
             f"cost_makespan={st['cost_makespan']:.0f};"
@@ -166,20 +169,20 @@ def _skew_rows(quick: bool) -> list[Row]:
     return rows
 
 
-def _sharded_csr_rows(quick: bool) -> list[Row]:
+def _sharded_csr_rows(quick: bool) -> list[BenchRecord]:
     """Row-partitioned-CSR count parity on every tier-1 query shape."""
     g = powerlaw_cluster(300 if quick else 1000, 4, seed=11)
     unary = {f"v{i}": node_sample(g.n_nodes, 6, seed=i)
              for i in range(1, 5)}
     gdb = GraphDB(g, unary)
-    rows: list[Row] = []
+    rows: list[BenchRecord] = []
     for qname in SHARDED_CSR_QUERIES:
         sg = ShardedGraphDB(g, CSR_SHARDS, unary)
         ref = engine_mod.count(get_query(qname), gdb, engine="vlftj")
         got, us = timed(lambda: sharded_count(get_query(qname), sg),
                         repeats=1, timeout_s=300)
         assert got == ref, (qname, got, ref)
-        rows.append(Row(
+        rows.append(Rec(
             f"sharded_csr/{qname}", us,
             f"count={got};match={int(got == ref)};"
             f"shards={CSR_SHARDS};"
@@ -187,8 +190,8 @@ def _sharded_csr_rows(quick: bool) -> list[Row]:
     return rows
 
 
-def _train_rows(quick: bool) -> tuple[list[Row], dict]:
-    rows: list[Row] = []
+def _train_rows(quick: bool) -> tuple[list[BenchRecord], dict]:
+    rows: list[BenchRecord] = []
     cfg = TransformerConfig(name="bench", n_layers=2, d_model=64, n_heads=4,
                             n_kv_heads=2, d_ff=128, vocab_size=256,
                             dtype=jnp.float32, remat=False)
@@ -229,12 +232,12 @@ def _train_rows(quick: bool) -> tuple[list[Row], dict]:
         name = "compressed" if compressed else "uncompressed"
         curves[name] = losses
         us = float(np.median(times[1:])) * 1e6       # skip the compile step
-        rows.append(Row(f"train/{name}_step", us,
+        rows.append(Rec(f"train/{name}_step", us,
                         f"loss0={losses[0]:.3f};lossN={losses[-1]:.3f}"))
     return rows, curves
 
 
-def run(quick: bool = True, skew_only: bool = False) -> list[Row]:
+def run(quick: bool = True, skew_only: bool = False) -> list[BenchRecord]:
     if skew_only:
         return _skew_rows(quick)
     rows = _join_rows(quick) + _skew_rows(quick) + _sharded_csr_rows(quick)

@@ -21,6 +21,7 @@ high-fanout shape where factorization and chunking pay off).
 """
 import json
 import os
+from functools import partial
 
 from repro.core import GraphDB, GraphStats, VLFTJ, get_query
 from repro.core import engine as engine_mod
@@ -28,7 +29,9 @@ from repro.core.planner import plan_query
 from repro.graphs import node_sample, powerlaw_cluster
 from repro.results import factorize_vlftj
 
-from .common import Row, timed
+from .common import BenchRecord, timed
+
+Rec = partial(BenchRecord, bench="enumerate")
 
 QUERIES = ("3-clique", "3-path")
 PAGE_ROWS = 4096
@@ -41,8 +44,8 @@ def _gdb(quick: bool) -> GraphDB:
     return GraphDB(g, unary)
 
 
-def run(quick: bool = True) -> list[Row]:
-    rows: list[Row] = []
+def run(quick: bool = True) -> list[BenchRecord]:
+    rows: list[BenchRecord] = []
     gdb = _gdb(quick)
     stats = GraphStats.of(gdb)
     for qname in QUERIES:
@@ -55,7 +58,7 @@ def run(quick: bool = True) -> list[Row]:
         out, us = timed(flat, repeats=3)
         n = out.shape[0]
         rps = n / max(us, 1e-9) * 1e6
-        rows.append(Row(f"{qname}/flat", us,
+        rows.append(Rec(f"{qname}/flat", us,
                         f"rows={n};rows_per_s={rps:.0f};"
                         f"bytes={out.nbytes};peak_rows={n}"))
 
@@ -69,7 +72,7 @@ def run(quick: bool = True) -> list[Row]:
 
         (cur, total), us = timed(chunked, repeats=3)
         assert total == n, (total, n)
-        rows.append(Row(
+        rows.append(Rec(
             f"{qname}/chunked", us,
             f"rows={n};rows_per_s={n / max(us, 1e-9) * 1e6:.0f};"
             f"pages={cur.stats['pages']};"
@@ -81,7 +84,7 @@ def run(quick: bool = True) -> list[Row]:
         fr, us = timed(fact, repeats=3)
         assert fr.count() == n, (fr.count(), n)
         ratio = out.nbytes / max(1, fr.nbytes)
-        rows.append(Row(
+        rows.append(Rec(
             f"{qname}/factorized", us,
             f"rows={n};rows_per_s={n / max(us, 1e-9) * 1e6:.0f};"
             f"bytes={fr.nbytes};flat_over_fact={ratio:.2f}"))

@@ -8,17 +8,21 @@ probe fan-out).
 """
 from __future__ import annotations
 
+from functools import partial
+
 from repro.core import Minesweeper, VLFTJ, get_query, is_neo, Hypergraph
 
-from .common import Row, bench_gdb, timed
+from .common import BenchRecord, bench_gdb, timed
+
+Rec = partial(BenchRecord, bench="gao")
 
 ORDERS = ["abcde", "bacde", "bcade", "cbade", "cbdae", "abdce", "badce"]
 
 
-def run(quick: bool = True) -> list[Row]:
+def run(quick: bool = True) -> list[BenchRecord]:
     q = get_query("4-path")
     hg = Hypergraph.of(q)
-    rows: list[Row] = []
+    rows: list[BenchRecord] = []
     gdb_small = bench_gdb("ca-GrQc", 0.012 if quick else 0.05,
                           selectivity=8)
     db = gdb_small.to_database()
@@ -34,8 +38,8 @@ def run(quick: bool = True) -> list[Row]:
         if ref is None:
             ref = (c1, c2)
         assert (c1, c2) == ref, (order, c1, c2, ref)
-        rows.append(Row(f"t4/gao-{order}/ms", us_ms,
+        rows.append(Rec(f"t4/gao-{order}/ms", us_ms,
                         f"neo={neo};count={c1}"))
-        rows.append(Row(f"t4/gao-{order}/vlftj", us_vl,
+        rows.append(Rec(f"t4/gao-{order}/vlftj", us_vl,
                         f"neo={neo};count={c2}"))
     return rows

@@ -8,16 +8,20 @@ Reported: runtime normalized to f=1, plus the worker-load imbalance
 from __future__ import annotations
 
 
+from functools import partial
+
 from repro.core import get_query
 from repro.dist.sharded_join import PartitionedJoin
 
-from .common import Row, bench_gdb, timed
+from .common import BenchRecord, bench_gdb, timed
+
+Rec = partial(BenchRecord, bench="granularity")
 
 FACTORS = [1, 2, 3, 4, 8, 12, 14]
 
 
-def run(quick: bool = True) -> list[Row]:
-    rows: list[Row] = []
+def run(quick: bool = True) -> list[BenchRecord]:
+    rows: list[BenchRecord] = []
     gdb = bench_gdb("wiki-Vote", 0.25 if quick else 1.0, selectivity=8)
     for qname in ["3-clique", "4-cycle", "3-path"]:
         q = get_query(qname)
@@ -35,7 +39,7 @@ def run(quick: bool = True) -> list[Row]:
             # wall time (pure overhead view).
             mk = pj.stats["makespan"]
             tt = pj.stats["total_time"]
-            rows.append(Row(
+            rows.append(Rec(
                 f"t5/{qname}/f{f}", us,
                 f"makespan_norm={mk / max(base_mk, 1e-9):.2f};"
                 f"imbalance={mk * 8 / max(tt, 1e-9):.2f}"))

@@ -10,14 +10,18 @@ vectorized LFTJ, reported as a ratio on low-selectivity paths.
 """
 from __future__ import annotations
 
+from functools import partial
+
 from repro.core import Minesweeper, count, get_query
 
-from .common import Row, bench_gdb, timed
+from .common import BenchRecord, bench_gdb, timed
+
+Rec = partial(BenchRecord, bench="ideas")
 
 
-def run(quick: bool = True) -> list[Row]:
+def run(quick: bool = True) -> list[BenchRecord]:
     scale = 0.03 if quick else 0.1   # faithful MS is host Python
-    rows: list[Row] = []
+    rows: list[BenchRecord] = []
     gdb = bench_gdb("ca-GrQc", scale, selectivity=8)
     db = gdb.to_database()
     for qname in ["2-comb", "3-path", "4-path"]:
@@ -27,7 +31,7 @@ def run(quick: bool = True) -> list[Row]:
         c2, us_off = timed(lambda: Minesweeper(q, db,
                                                skip_probes=False).count())
         assert c1 == c2
-        rows.append(Row(f"t1/idea4/{qname}", us_on,
+        rows.append(Rec(f"t1/idea4/{qname}", us_on,
                         f"speedup={us_off / max(us_on, 1):.2f}x"))
     for qname in ["3-clique", "4-cycle"]:
         q = get_query(qname)
@@ -36,7 +40,7 @@ def run(quick: bool = True) -> list[Row]:
         c2, us_off = timed(lambda: Minesweeper(q, db,
                                                use_skeleton=False).count())
         assert c1 == c2
-        rows.append(Row(f"t3/idea7/{qname}", us_on,
+        rows.append(Rec(f"t3/idea7/{qname}", us_on,
                         f"speedup={us_off / max(us_on, 1):.2f}x"))
     # Idea 6 analogue: caching (message passing) vs re-searching (vlftj)
     gdb2 = bench_gdb("wiki-Vote", 0.25 if quick else 1.0, selectivity=8)
@@ -46,6 +50,6 @@ def run(quick: bool = True) -> list[Row]:
         c2, us_vl = timed(lambda: count(q, gdb2, engine="vlftj"),
                           timeout_s=120)
         assert ref == c2
-        rows.append(Row(f"t2/idea6-analogue/{qname}", us_ms,
+        rows.append(Rec(f"t2/idea6-analogue/{qname}", us_ms,
                         f"caching_speedup={us_vl / max(us_ms, 1):.1f}x"))
     return rows

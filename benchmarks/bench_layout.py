@@ -31,13 +31,16 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+from functools import partial
 
 from repro.core import HybridGraphDB, GraphStats, get_query
 from repro.core.planner import plan_query
 from repro.core.vlftj import VLFTJ
 from repro.graphs import erdos_renyi, node_sample, zipf_graph
 
-from .common import Row, timed
+from .common import BenchRecord, timed
+
+Rec = partial(BenchRecord, bench="layout")
 
 ALPHAS = (1.5, 2.0, 2.5)
 
@@ -57,7 +60,7 @@ def _hdb(g, qname: str) -> HybridGraphDB:
     return HybridGraphDB.build(g, unary)
 
 
-def _pair_rows(tag: str, qname: str, g, repeats: int = 3) -> list[Row]:
+def _pair_rows(tag: str, qname: str, g, repeats: int = 3) -> list[BenchRecord]:
     """Time the same plan with layouts forced to array vs as chosen."""
     q = get_query(qname)
     hdb = _hdb(g, qname)
@@ -75,8 +78,8 @@ def _pair_rows(tag: str, qname: str, g, repeats: int = 3) -> list[Row]:
     eng.count()  # one instrumented pass for the bitset row count
     speed = us_arr / max(us_hyb, 1e-9)
     return [
-        Row(f"{tag}/array", us_arr, f"count={c_arr}"),
-        Row(f"{tag}/hybrid", us_hyb,
+        Rec(f"{tag}/array", us_arr, f"count={c_arr}"),
+        Rec(f"{tag}/hybrid", us_hyb,
             f"count={c_hyb};hubs={hdb.n_hubs};"
             f"bitset_rows={eng.stats['bitset_rows']};"
             f"layouts={'-'.join(plan.level_layouts)};"
@@ -84,20 +87,20 @@ def _pair_rows(tag: str, qname: str, g, repeats: int = 3) -> list[Row]:
     ]
 
 
-def _build_rows(quick: bool) -> list[Row]:
+def _build_rows(quick: bool) -> list[BenchRecord]:
     rows = []
     for alpha in ALPHAS:
         g = _graph(alpha, quick)
         HybridGraphDB.build(g)
         lay, us = timed(lambda: HybridGraphDB.build(g).layout, repeats=3)
-        rows.append(Row(f"build/zipf{alpha}", us,
+        rows.append(Rec(f"build/zipf{alpha}", us,
                         f"hubs={lay.n_hubs};words={lay.n_words};"
                         f"min_degree={lay.min_degree}"))
     return rows
 
 
-def run(quick: bool = True) -> list[Row]:
-    rows: list[Row] = []
+def run(quick: bool = True) -> list[BenchRecord]:
+    rows: list[BenchRecord] = []
     for alpha in ALPHAS:
         rows += _pair_rows(f"triangle/zipf{alpha}", "3-clique",
                            _graph(alpha, quick))

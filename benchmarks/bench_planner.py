@@ -26,6 +26,7 @@ from __future__ import annotations
 import json
 import os
 import time
+from functools import partial
 
 import numpy as np
 
@@ -33,7 +34,9 @@ from repro.core import (GraphStats, PlanCache, count, execute, get_query,
                         plan_query)
 from repro.core.planner import candidate_gaos, candidate_plans
 
-from .common import Row, bench_gdb, timed
+from .common import BenchRecord, bench_gdb, timed
+
+Rec = partial(BenchRecord, bench="planner")
 
 SHAPES = ["3-clique", "4-clique", "4-cycle", "3-path", "4-path",
           "1-tree", "2-comb", "2-lollipop", "3-lollipop"]
@@ -48,8 +51,8 @@ def _spearman(a, b) -> float:
     return float(np.corrcoef(ra, rb)[0, 1])
 
 
-def run(quick: bool = True) -> list[Row]:
-    rows: list[Row] = []
+def run(quick: bool = True) -> list[BenchRecord]:
+    rows: list[BenchRecord] = []
     gdb = bench_gdb("ca-GrQc", 0.12 if quick else 1.0, selectivity=8)
     stats = GraphStats.of(gdb)
 
@@ -62,9 +65,9 @@ def run(quick: bool = True) -> list[Row]:
         cold_us = (time.time() - t0) * 1e6
         _, hit_us = timed(lambda: cache.get_or_plan(q, stats),
                           repeats=200, timeout_s=10)
-        rows.append(Row(f"plan/{qname}/cold", cold_us,
+        rows.append(Rec(f"plan/{qname}/cold", cold_us,
                         f"engine={plan.engine};gao={''.join(plan.gao)}"))
-        rows.append(Row(f"plan/{qname}/cached", hit_us,
+        rows.append(Rec(f"plan/{qname}/cached", hit_us,
                         f"hits={cache.hits}"))
 
     # -- cost model vs actual: GAO ranking -----------------------------------
@@ -83,7 +86,7 @@ def run(quick: bool = True) -> list[Row]:
             est.append(plan.est_cost)   # the pinned-gao estimate
             actual.append(us)
         rho = _spearman(np.asarray(est), np.asarray(actual))
-        rows.append(Row(f"costmodel/{qname}/gao_rank_corr", 0.0,
+        rows.append(Rec(f"costmodel/{qname}/gao_rank_corr", 0.0,
                         f"rho={rho:.3f};n={len(gaos)}"))
 
     # -- cost model vs actual: engine ranking --------------------------------
@@ -97,7 +100,7 @@ def run(quick: bool = True) -> list[Row]:
             est.append(plan.est_cost)
             actual.append(us)
     rho = _spearman(np.asarray(est), np.asarray(actual))
-    rows.append(Row("costmodel/engines/rank_corr", 0.0,
+    rows.append(Rec("costmodel/engines/rank_corr", 0.0,
                     f"rho={rho:.3f};n={len(est)}"))
 
     # -- estimate fidelity: per-level Q-error from traced runs ---------------
@@ -113,12 +116,12 @@ def run(quick: bool = True) -> list[Row]:
             qe = rec.get("q_error")
             if qe is None:
                 continue
-            rows.append(Row(
+            rows.append(Rec(
                 f"qerror/{qname}/L{rec['level']}", 0.0,
                 f"var={rec.get('var')};est={rec.get('est_rows'):.4g};"
                 f"obs={rec.get('obs_rows')};q={qe:.4g}"))
         mq = tr.max_q_error
-        rows.append(Row(f"qerror/{qname}/max", 0.0, f"q={mq:.4g}"))
+        rows.append(Rec(f"qerror/{qname}/max", 0.0, f"q={mq:.4g}"))
 
     # -- end-to-end: served count latency with plan cache --------------------
     cache = PlanCache()
@@ -127,7 +130,7 @@ def run(quick: bool = True) -> list[Row]:
         count(q, gdb, cache=cache)      # cold: plan + compile + execute
         _, us = timed(lambda: count(q, gdb, cache=cache), repeats=3,
                       timeout_s=60)
-        rows.append(Row(f"serve/{qname}/warm_count", us,
+        rows.append(Rec(f"serve/{qname}/warm_count", us,
                         f"cache_hits={cache.hits}"))
     return rows
 

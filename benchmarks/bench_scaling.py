@@ -14,21 +14,25 @@ default for production).
 """
 from __future__ import annotations
 
+from functools import partial
+
 import numpy as np
 
 from repro.core import GraphDB, JoinBlowup, VLFTJ, binary_join_count, \
     get_query
 from repro.graphs import powerlaw_cluster
 
-from .common import Row, timed
+from .common import BenchRecord, timed
+
+Rec = partial(BenchRecord, bench="scaling")
 
 CAP = 20_000_000
 
 
-def run(quick: bool = True) -> list[Row]:
+def run(quick: bool = True) -> list[BenchRecord]:
     n = 6000 if quick else 20000
     densities = [4, 8, 16, 32] if quick else [4, 8, 16, 32, 48]
-    rows: list[Row] = []
+    rows: list[BenchRecord] = []
     for qname in ["3-clique", "4-clique"]:
         q = get_query(qname)
         for m in densities:
@@ -38,17 +42,17 @@ def run(quick: bool = True) -> list[Row]:
             wedges = int((deg * (deg - 1) // 2).sum())
             eng = VLFTJ(q, gdb, rotate_checks=True)
             ref, us = timed(eng.count, timeout_s=300)
-            rows.append(Row(f"f67/{qname}/m{m}/vlftj", us,
+            rows.append(Rec(f"f67/{qname}/m{m}/vlftj", us,
                             f"edges={g.n_edges // 2};wedges={wedges};"
                             f"count={ref}"))
             try:
                 c2, us2 = timed(lambda: binary_join_count(
                     q, gdb.to_database(), cap=CAP), timeout_s=300)
                 assert c2 == ref
-                rows.append(Row(f"f67/{qname}/m{m}/binary", us2,
+                rows.append(Rec(f"f67/{qname}/m{m}/binary", us2,
                                 f"wedges={wedges}"))
             except JoinBlowup as e:
-                rows.append(Row(f"f67/{qname}/m{m}/binary", float("inf"),
+                rows.append(Rec(f"f67/{qname}/m{m}/binary", float("inf"),
                                 f"BLOWUP rows={e.rows}>{CAP} "
                                 f"(paper: '-')"))
     return rows

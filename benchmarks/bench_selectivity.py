@@ -8,20 +8,24 @@ fraction 0.8% → 25%) at fixed graph.
 """
 from __future__ import annotations
 
+from functools import partial
+
 from repro.core import (GraphDB, GraphStats, VLFTJ, get_query, plan_query,
                         yannakakis_count)
 from repro.graphs import node_sample, powerlaw_cluster
 
-from .common import Row, timed
+from .common import BenchRecord, timed
+
+Rec = partial(BenchRecord, bench="selectivity")
 
 SELECTIVITIES = [128, 64, 32, 16, 8, 4]
 
 
-def run(quick: bool = True) -> list[Row]:
+def run(quick: bool = True) -> list[BenchRecord]:
     n = 4000 if quick else 50_000
     g = powerlaw_cluster(n, 6, seed=2)
     q = get_query("3-path")
-    rows: list[Row] = []
+    rows: list[BenchRecord] = []
     for sel in SELECTIVITIES:
         unary = {"v1": node_sample(g.n_nodes, sel, seed=11),
                  "v2": node_sample(g.n_nodes, sel, seed=13)}
@@ -33,8 +37,8 @@ def run(quick: bool = True) -> list[Row]:
                                         plan=pv).count(),
                           timeout_s=120)
         assert c2 == ref
-        rows.append(Row(f"f345/3-path/sel{sel}/ms-analogue", us_ms,
+        rows.append(Rec(f"f345/3-path/sel{sel}/ms-analogue", us_ms,
                         f"sample={unary['v1'].size};count={ref}"))
-        rows.append(Row(f"f345/3-path/sel{sel}/vlftj", us_vl,
+        rows.append(Rec(f"f345/3-path/sel{sel}/vlftj", us_vl,
                         f"ms_advantage={us_vl / max(us_ms, 1):.1f}x"))
     return rows

@@ -28,6 +28,7 @@ policies — windows and pages do not depend on the policy) is excluded.
 import json
 import os
 import time
+from functools import partial
 
 import numpy as np
 
@@ -35,7 +36,9 @@ from repro.graphs import powerlaw_cluster
 from repro.serve import (QuantumScheduler, QueryRequest, QueryServer,
                          TenantQuota)
 
-from .common import Row
+from .common import BenchRecord
+
+Rec = partial(BenchRecord, bench="serve")
 
 QUANTUM_ROWS = 4096
 N_SMALL = 16
@@ -88,23 +91,23 @@ def _run_policy(csr, policy: str, n_small: int) -> dict:
     }
 
 
-def run(quick: bool = True, smoke: bool = False) -> list[Row]:
+def run(quick: bool = True, smoke: bool = False) -> list[BenchRecord]:
     csr = _graph(quick, smoke)
     n_small = N_SMALL // 2 if smoke else N_SMALL
     _run_policy(csr, "fifo", n_small)       # warm-up: jit compiles
     out = {p: _run_policy(csr, p, n_small) for p in ("fifo", "quantum")}
-    rows: list[Row] = []
+    rows: list[BenchRecord] = []
     for p, m in out.items():
-        rows.append(Row(
+        rows.append(Rec(
             f"serve/{p}/small", m["small_p99_wall_us"],
             f"p50_vclock={m['small_p50_vclock']};"
             f"p99_vclock={m['small_p99_vclock']};n={n_small}"))
-        rows.append(Row(
+        rows.append(Rec(
             f"serve/{p}/heavy", 0.0,
             f"rows_expanded={m['heavy_rows_expanded']};"
             f"quanta={m['heavy_quanta']};"
             f"preemptions={m['heavy_preemptions']}"))
-        rows.append(Row(
+        rows.append(Rec(
             f"serve/{p}/total", m["wall_s"] * 1e6,
             f"rows_expanded={m['total_rows_expanded']};"
             f"rows_per_s={m['rows_per_s']:.0f}"))
@@ -112,7 +115,7 @@ def run(quick: bool = True, smoke: bool = False) -> list[Row]:
         / max(out["quantum"]["small_p99_vclock"], 1)
     tput = out["quantum"]["rows_per_s"] / max(out["fifo"]["rows_per_s"],
                                               1e-9)
-    rows.append(Row(
+    rows.append(Rec(
         "serve/fairness", 0.0,
         f"p99_improvement={imp:.1f}x;throughput_ratio={tput:.3f};"
         f"equal_work="

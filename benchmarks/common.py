@@ -9,6 +9,8 @@ scales sizes for the CPU container; pass ``--full`` for larger runs.
 """
 from __future__ import annotations
 
+import math
+import re
 import time
 from dataclasses import dataclass
 
@@ -16,6 +18,10 @@ from dataclasses import dataclass
 from repro.core import GraphDB
 from repro.graphs import node_sample
 from repro.graphs.generators import make_snap_like
+
+#: bump when the normalized record layout changes — ``BENCH_history.jsonl``
+#: lines carry it so ``tools/bench_compare.py`` can refuse mixed schemas.
+BENCH_SCHEMA_VERSION = 1
 
 
 @dataclass
@@ -26,6 +32,97 @@ class Row:
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+@dataclass
+class BenchRecord(Row):
+    """Normalized benchmark measurement: a :class:`Row` plus the owning
+    bench module key and the result cardinality (the parity signal the
+    regression gate checks alongside wall time).
+
+    ``count`` is parsed from a ``count=<n>`` token in ``derived`` when
+    not given explicitly, so legacy rows normalize without touching
+    every call site's derived-string convention.
+    """
+    bench: str = ""
+    count: int | None = None
+
+    def __post_init__(self) -> None:
+        if self.count is None:
+            m = re.search(r"(?:^|[;,])count=(\d+)", ";" + self.derived)
+            if m:
+                self.count = int(m.group(1))
+
+    def to_json(self) -> dict:
+        """JSON-safe dict: ``inf`` wall (timeout/blowup rows) maps to
+        null so the history file stays parseable everywhere."""
+        us = self.us_per_call
+        return {"bench": self.bench, "name": self.name,
+                "us_per_call": round(us, 3) if math.isfinite(us) else None,
+                "count": self.count, "derived": self.derived}
+
+    @classmethod
+    def of(cls, bench: str, row: "Row") -> "BenchRecord":
+        """Coerce any ``Row`` (or stamp an unlabelled ``BenchRecord``)
+        onto the normalized schema under bench key ``bench``."""
+        if isinstance(row, BenchRecord):
+            if not row.bench:
+                row.bench = bench
+            return row
+        return cls(row.name, row.us_per_call, row.derived, bench=bench)
+
+
+def git_rev() -> str | None:
+    """Short commit hash of the working tree, or None outside a repo."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, check=True)
+        return out.stdout.strip() or None
+    except Exception:
+        return None
+
+
+def run_header(quick: bool) -> dict:
+    """Shared run-level fields for history lines and baseline files."""
+    import uuid
+    return {"schema": BENCH_SCHEMA_VERSION,
+            "run_id": uuid.uuid4().hex[:12],
+            "ts": round(time.time(), 3),
+            "git": git_rev(),
+            "quick": bool(quick)}
+
+
+def append_history(path: str, records: list["BenchRecord"],
+                   quick: bool = True) -> dict:
+    """Append one JSONL line per record to the bench history file.
+
+    Every line repeats the run header (``run_id`` groups one driver
+    invocation) so the file stays a flat, greppable, append-only log —
+    no state beyond "open for append".  Returns the header used.
+    """
+    import json
+    hdr = run_header(quick)
+    with open(path, "a") as fh:
+        for rec in records:
+            fh.write(json.dumps({**hdr, **rec.to_json()}) + "\n")
+    return hdr
+
+
+def write_baseline(path: str, records: list["BenchRecord"],
+                   quick: bool = True) -> dict:
+    """Write the committed regression baseline: run header plus the
+    full normalized record list, one stable-sorted JSON document."""
+    import json
+    payload = dict(run_header(quick))
+    payload["records"] = sorted(
+        (r.to_json() for r in records),
+        key=lambda d: (d["bench"], d["name"]))
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1)
+        fh.write("\n")
+    return payload
 
 
 def timed(fn, repeats: int = 1, timeout_s: float = 120.0):

@@ -2,6 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` runs paper-scale
 sizes (slow on CPU); default is the quick profile.
+
+Every run also appends normalized :class:`benchmarks.common.BenchRecord`
+lines to ``BENCH_history.jsonl`` (``--history`` to relocate,
+``--no-history`` to skip) — the append-only log that
+``tools/bench_compare.py`` gates CI perf regressions against.
+``--baseline-out`` additionally writes the single-document baseline
+snapshot that gets committed.
 """
 from __future__ import annotations
 
@@ -17,6 +24,13 @@ def main() -> None:
                     help="comma list: cyclic,acyclic,ideas,gao,"
                          "granularity,scaling,agm,planner,dist,"
                          "enumerate,layout,serve")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="append-only JSONL bench log (default "
+                         "BENCH_history.jsonl)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip writing the history file")
+    ap.add_argument("--baseline-out", default=None,
+                    help="also write a BENCH_baseline.json snapshot here")
     args = ap.parse_args()
     quick = not args.full
 
@@ -43,7 +57,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0
+    records = []
     import importlib
+
+    from .common import BenchRecord, append_history, write_baseline
     for key in chosen:
         mod_name = modules[key]
         # import lazily: one module's missing dependency (e.g. the
@@ -51,10 +68,21 @@ def main() -> None:
         try:
             mod = importlib.import_module(f".{mod_name}", __package__)
             for row in mod.run(quick=quick):
-                print(row.csv(), flush=True)
+                # modules emit BenchRecord already; `of` stamps the
+                # bench key on any plain Row that slips through
+                rec = BenchRecord.of(key, row)
+                records.append(rec)
+                print(rec.csv(), flush=True)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{key}/ERROR,inf,{type(e).__name__}: {e}", flush=True)
+    if records and not args.no_history:
+        hdr = append_history(args.history, records, quick=quick)
+        print(f"# history: {len(records)} records -> {args.history} "
+              f"(run_id={hdr['run_id']})", file=sys.stderr)
+    if records and args.baseline_out:
+        write_baseline(args.baseline_out, records, quick=quick)
+        print(f"# baseline -> {args.baseline_out}", file=sys.stderr)
     print(f"# total {time.time() - t0:.1f}s, module_failures={failures}",
           file=sys.stderr)
     if failures:

@@ -332,6 +332,12 @@ class VLFTJ:
         """
         gdb = self.gdb
         indptr, indices = gdb.dev("indptr"), gdb.dev("indices")
+        # device profiling (repro.obs.profile): resolved once per run —
+        # None (the default) keeps every hook below a dead branch, so a
+        # disabled profile adds zero work beyond this contextvar read
+        # (lazy import: repro.obs pulls in repro.core at package level)
+        from ..obs.profile import current_profile
+        prof = current_profile()
         n_levels = len(self.plan) if max_levels is None else max_levels
         lv_rows = self.stats["level_rows"]
         lv_wall = self.stats["level_wall_s"]
@@ -376,6 +382,8 @@ class VLFTJ:
                 lv_rows[level] = int(frontier.shape[0])
                 lv_wall[level] = (lv_wall.get(level, 0.0)
                                   + round(time.perf_counter() - t_lv, 6))
+                if prof is not None:
+                    prof.sample_memory()
                 frontier, mult = boundary(level, frontier, mult)
                 continue
             C = frontier.shape[0]
@@ -425,6 +433,10 @@ class VLFTJ:
                                   bitset_words=self.gdb.dev("bitset_words"))
                     self.stats["chunks"] += 1
                     self.stats["candidates"] += crows * self.width
+                    # kernel-wall breakdown: bracket the dispatch (and
+                    # the host conversion that blocks on it) with two
+                    # clock reads — no extra device work either way
+                    t_k = 0.0 if prof is None else time.perf_counter()
                     if last_count:
                         total += int(np.asarray(_expand_level(
                             *args, count_only=True, **kw)).sum())
@@ -435,10 +447,18 @@ class VLFTJ:
                         new_rows.append(fchunk[rows])
                         new_vals.append(cand[rows, cols])
                         new_mult.append(mchunk[rows])
+                    if prof is not None:
+                        prof.record_jit_call()
+                        prof.record_kernel(
+                            "intersect_bitset" if mode == "bitset"
+                            else "intersect",
+                            time.perf_counter() - t_k)
             if last_count:
                 lv_rows[level] = int(total)
                 lv_wall[level] = (lv_wall.get(level, 0.0)
                                   + round(time.perf_counter() - t_lv, 6))
+                if prof is not None:
+                    prof.sample_memory()
                 return total
             frontier = np.concatenate(
                 [np.concatenate(new_rows, 0) if new_rows else
@@ -452,6 +472,11 @@ class VLFTJ:
             lv_rows[level] = int(frontier.shape[0])
             lv_wall[level] = (lv_wall.get(level, 0.0)
                               + round(time.perf_counter() - t_lv, 6))
+            if prof is not None:
+                # memory watermark at the level boundary — the engine's
+                # host-visible synchronization point, where the frontier
+                # for the next level is fully materialized
+                prof.sample_memory()
             frontier, mult = boundary(level, frontier, mult)
             self.stats["frontier_peak"] = max(self.stats["frontier_peak"],
                                               frontier.shape[0])
@@ -549,6 +574,11 @@ class VLFTJ:
                 jnp.ones(frontier.shape[0], dtype=jnp.int64),
                 jnp.asarray(row_valid))
         self.stats["ll_calls"] += 1
+        from ..obs.profile import current_profile
+        prof = current_profile()
+        if prof is not None:
+            prof.record_jit_call()
+            t_k = time.perf_counter()
         if mode == "bsearch2":
             # summary is a traced kwarg, not a static — the AOT signature
             # below would drop it; this mode keeps the jitted dispatch
@@ -558,12 +588,25 @@ class VLFTJ:
             fn = self._ll_compiled.get(key)
             if fn is None:
                 self.stats["ll_compiles"] += 1
+                t_c = time.perf_counter()
                 fn = _expand_level.lower(*args, **kw).compile()
+                if prof is not None:
+                    prof.record_compile(
+                        f"final_level{frontier.shape}"
+                        f"/count={count_only}",
+                        time.perf_counter() - t_c)
+                    t_k = time.perf_counter()   # compile wall kept apart
                 self._ll_compiled[key] = fn
             out = fn(*args)
         if count_only:
-            return np.asarray(out)
-        return tuple(np.asarray(x) for x in out)
+            out = np.asarray(out)
+            if prof is not None:
+                prof.record_kernel("intersect", time.perf_counter() - t_k)
+            return out
+        out = tuple(np.asarray(x) for x in out)
+        if prof is not None:
+            prof.record_kernel("intersect", time.perf_counter() - t_k)
+        return out
 
     # -- public API ----------------------------------------------------------
     def count(self) -> int:

@@ -105,6 +105,12 @@ class WorkerPool:
             first = workers[0][1][0] if workers else None
             backend = (pick_backend(fn, parts[first])
                        if first is not None else "thread")
+        # resolve the device profile in the *calling* thread: pool
+        # workers run in other threads/processes and contextvars do not
+        # cross that boundary, so per-worker spans are recorded here
+        # from the drain timings the pool returns anyway
+        from ..obs.profile import current_profile
+        prof = current_profile()
         t0 = time.perf_counter()
         results: dict[int, object] = {}
         part_time: dict[int, float] = {}
@@ -114,7 +120,7 @@ class WorkerPool:
                 for pid, res, dt in _drain(fn, owned, parts):
                     results[pid] = res
                     part_time[pid] = dt
-            self._observe(part_time, workers, "sequential")
+            self._observe(part_time, workers, "sequential", prof)
             return results, part_time, time.perf_counter() - t0, "sequential"
         pool_cls = (ProcessPoolExecutor if backend == "process"
                     else ThreadPoolExecutor)
@@ -129,15 +135,20 @@ class WorkerPool:
                 for pid, res, dt in fut.result():
                     results[pid] = res
                     part_time[pid] = dt
-        self._observe(part_time, workers, backend)
+        self._observe(part_time, workers, backend, prof)
         return results, part_time, time.perf_counter() - t0, backend
 
     @staticmethod
     def _observe(part_time: dict[int, float],
-                 workers: list[tuple[int, list[int]]], backend: str) -> None:
-        """Record per-worker makespans into the process metrics registry."""
+                 workers: list[tuple[int, list[int]]], backend: str,
+                 prof=None) -> None:
+        """Record per-worker makespans into the process metrics registry
+        (and, when a device profile is active, per-worker spans)."""
         from ..obs import get_registry
         hist = get_registry().histogram("pool_worker_seconds",
                                         backend=backend)
-        for _w, owned in workers:
-            hist.observe(sum(part_time.get(p, 0.0) for p in owned))
+        for w, owned in workers:
+            seconds = sum(part_time.get(p, 0.0) for p in owned)
+            hist.observe(seconds)
+            if prof is not None:
+                prof.record_worker(w, backend, seconds)

@@ -11,20 +11,30 @@ Three pieces (see ``docs/OBSERVABILITY.md`` for the full walkthrough):
 * :class:`MetricsRegistry` / :func:`get_registry` — process-wide
   counters/gauges/histograms with labels, snapshotted by
   ``QueryServer.metrics()``.
+* :class:`DeviceProfile` / :func:`current_profile` — device-side
+  resource accounting one layer below the trace: jit compile/call
+  counts and compile wall, per-kernel-family wall breakdown
+  (``intersect`` / ``intersect_bitset`` / ``segment_outer``), and
+  live-buffer memory watermarks sampled at GAO level boundaries.
 
-Everything records host-resident numbers only: tracing and metrics add
-zero device dispatches (guarded by ``tests/test_obs.py``).
+Everything records host-resident numbers only: tracing, metrics, and
+profiling add zero device dispatches (guarded by ``tests/test_obs.py``
+and ``tests/test_profile.py``).
 """
 from .explain import ExplainResult, explain_analyze
 from .metrics import (Counter, DEFAULT_BUCKETS, Gauge, Histogram,
                       MetricsRegistry, get_registry)
+from .profile import (DeviceProfile, KERNEL_FAMILIES, NULL_PROFILE,
+                      NullProfile, PROFILE_SCHEMA_VERSION, current_profile)
 from .schema import ENGINE_REQUIRED_KEYS, normalize_engine_stats
 from .trace import (NULL_TRACE, NullTrace, QueryTrace, TRACE_SCHEMA_VERSION,
                     current_trace, qerror)
 
 __all__ = [
-    "Counter", "DEFAULT_BUCKETS", "ENGINE_REQUIRED_KEYS", "ExplainResult",
-    "Gauge", "Histogram", "MetricsRegistry", "NULL_TRACE", "NullTrace",
-    "QueryTrace", "TRACE_SCHEMA_VERSION", "current_trace",
+    "Counter", "DEFAULT_BUCKETS", "DeviceProfile", "ENGINE_REQUIRED_KEYS",
+    "ExplainResult", "Gauge", "Histogram", "KERNEL_FAMILIES",
+    "MetricsRegistry", "NULL_PROFILE", "NULL_TRACE", "NullProfile",
+    "NullTrace", "PROFILE_SCHEMA_VERSION", "QueryTrace",
+    "TRACE_SCHEMA_VERSION", "current_profile", "current_trace",
     "explain_analyze", "get_registry", "normalize_engine_stats", "qerror",
 ]

@@ -113,12 +113,24 @@ class Histogram:
             if v <= ub:
                 self.counts[i] += 1
 
+    @staticmethod
+    def _le(ub: float) -> str:
+        """Prometheus ``le`` label text for an upper bound — explicit
+        ``"+Inf"`` for the terminal bucket (scrapers require it; a float
+        ``inf`` key would also render as non-standard JSON)."""
+        return "+Inf" if ub == float("inf") else f"{ub:g}"
+
     def snapshot(self):
+        """JSON-safe summary.  ``buckets`` maps the ``le`` label text
+        (``"0.064"``, …, always ending in ``"+Inf"``) to the cumulative
+        count of observations ``<=`` that bound; the ``+Inf`` bucket
+        always equals ``count`` (the cumulative invariant —
+        ``tests/test_obs.py``)."""
         return {"count": self.count, "sum": self.sum,
                 "min": self.min if self.count else None,
                 "max": self.max if self.count else None,
-                "buckets": {ub: c for ub, c in zip(self.buckets,
-                                                   self.counts)}}
+                "buckets": {self._le(ub): c
+                            for ub, c in zip(self.buckets, self.counts)}}
 
 
 class MetricsRegistry:
@@ -180,8 +192,7 @@ class MetricsRegistry:
                 for stat in ("count", "sum", "min", "max"):
                     out[self._series_name(f"{m.name}_{stat}",
                                           m.labels)] = s[stat]
-                for ub, c in s["buckets"].items():
-                    le = "+Inf" if ub == float("inf") else f"{ub:g}"
+                for le, c in s["buckets"].items():
                     out[self._series_name(f"{m.name}_bucket",
                                           {**m.labels, "le": le})] = c
         return out

@@ -35,12 +35,28 @@ page interface so the query server paginates every engine uniformly.
 """
 from __future__ import annotations
 
+import time
 from typing import Iterable, Iterator
 
 import numpy as np
 
 from ..core.vlftj import VLFTJ
 from ..kernels.segment_outer import segment_expand
+
+
+def _segment_expand(prefix, counts, vals):
+    """``segment_expand`` with the device-profile kernel-wall hook —
+    two clock reads when a profile is active, nothing otherwise."""
+    # lazy: repro.obs pulls in repro.core at package level
+    from ..obs.profile import current_profile
+    prof = current_profile()
+    if prof is None:
+        return segment_expand(prefix, counts, vals)
+    t0 = time.perf_counter()
+    out = segment_expand(prefix, counts, vals)
+    prof.record_jit_call()
+    prof.record_kernel("segment_outer", time.perf_counter() - t0)
+    return out
 
 
 class ResultCursor:
@@ -197,7 +213,7 @@ class ResultCursor:
                 self.stats["chunks"] += 1
                 for s in range(0, vals.shape[0], self.page_rows):
                     part = vals[s:s + self.page_rows]
-                    yield segment_expand(
+                    yield _segment_expand(
                         frontier[i:i + 1],
                         np.array([part.shape[0]], dtype=np.int64), part)
             return
@@ -244,8 +260,8 @@ class ResultCursor:
                     chunk.astype(np.int32), valid)
                 self.stats["chunks"] += 1
                 if vals.shape[0]:
-                    yield segment_expand(chunk[:real], ccounts[:real],
-                                         vals)
+                    yield _segment_expand(chunk[:real], ccounts[:real],
+                                          vals)
                 i = j
 
     # -- paging --------------------------------------------------------------

@@ -31,6 +31,9 @@ serves through the plan/execute split (``core.plan`` / ``core.planner``):
 """
 from __future__ import annotations
 
+import contextlib
+import json
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -40,8 +43,8 @@ import numpy as np
 from ..core import GraphDB, GraphStats, JoinPlan, PlanCache, get_query
 from ..core import engine as engine_mod
 from ..graphs import CSRGraph, node_sample
-from ..obs import MetricsRegistry, QueryTrace, get_registry, \
-    normalize_engine_stats
+from ..obs import DeviceProfile, MetricsRegistry, QueryTrace, \
+    get_registry, normalize_engine_stats
 from ..results import ResultCursor
 
 
@@ -74,6 +77,12 @@ class QueryRequest:
     #: ``QueryResult.trace``.  Off by default: a disabled tracer costs
     #: nothing (``tests/test_obs.py`` guards zero extra device dispatches).
     trace: bool = False
+    #: record a :class:`repro.obs.DeviceProfile` for this request — jit
+    #: compile/call counts + compile wall, per-kernel wall breakdown,
+    #: memory watermarks — returned as ``QueryResult.profile`` and
+    #: published into the server's metrics registry.  Off by default with
+    #: the same zero-device-dispatch guarantee (``tests/test_profile.py``).
+    profile: bool = False
 
     @property
     def wants_rows(self) -> bool:
@@ -112,6 +121,9 @@ class QueryResult:
     #: the request's :class:`repro.obs.QueryTrace` when ``req.trace`` was
     #: set (export with ``trace.to_jsonl()``); None otherwise.
     trace: QueryTrace | None = None
+    #: the request's :class:`repro.obs.DeviceProfile` when ``req.profile``
+    #: was set (export with ``profile.to_dict()``); None otherwise.
+    profile: DeviceProfile | None = None
 
 
 class QueryServer:
@@ -120,8 +132,17 @@ class QueryServer:
                  dist_edge_threshold: int | None = 1 << 22,
                  dist_workers: int = 4, dist_granularity: int = 2,
                  page_rows: int = 1024, max_open_cursors: int = 64,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 request_log: str | None = None):
         self.csr = csr
+        # structured request log: one JSON line per execute() call —
+        # trace_id, query, tenant, engine, count, latency, status — with
+        # the same trace_id stamped into the request's QueryTrace /
+        # DeviceProfile meta for correlation (schema:
+        # docs/OBSERVABILITY.md).  None disables logging entirely.
+        self.request_log = request_log
+        self._log_lock = threading.Lock()
+        self._request_seq = 0
         # process metrics: plan-cache traffic, cursor closes by reason,
         # scheduler quanta, pool makespans — one registry, snapshotted by
         # metrics().  Default: the process-wide registry; pass a private
@@ -207,6 +228,53 @@ class QueryServer:
         reg.gauge("server_plan_cache_size").set(len(self.plan_cache))
         reg.counter("server_metrics_snapshots").inc()
         return reg.snapshot()
+
+    # -- request log ---------------------------------------------------------
+    def _next_trace_id(self) -> str:
+        with self._log_lock:
+            self._request_seq += 1
+            return f"req-{self._request_seq}"
+
+    def _log_request(self, trace_id: str, req: QueryRequest,
+                     t0: float, result: QueryResult | None = None,
+                     error: Exception | None = None) -> None:
+        """Append one JSON line to the structured request log.
+
+        The line carries the generated ``trace_id`` — the same id
+        stamped into the request's trace/profile meta — so a log entry
+        joins to its exported trace artifact.  No-op when the server has
+        no ``request_log``.
+        """
+        if self.request_log is None:
+            return
+        rec = {"ts": round(time.time(), 3), "trace_id": trace_id,
+               "query": req.query_name, "tenant": req.tenant,
+               "status": "ok" if error is None else "error",
+               "latency_s": round((result.latency_s if result is not None
+                                   else time.time() - t0), 6),
+               "engine": (result.engine if result is not None
+                          else req.engine)}
+        if result is not None:
+            rec["count"] = result.count
+            rec["plan_cached"] = bool(result.plan_cached)
+            if result.next_cursor is not None:
+                rec["next_cursor"] = result.next_cursor
+            rec["traced"] = result.trace is not None
+            if result.profile is not None:
+                prof = result.profile
+                rec["profile"] = {
+                    "jit_compiles": prof.jit["compiles"],
+                    "jit_calls": prof.jit["calls"],
+                    "compile_wall_s": round(prof.jit["compile_wall_s"], 6),
+                    "peak_live_bytes": prof.memory["peak_live_bytes"]}
+        if error is not None:
+            rec["error"] = f"{type(error).__name__}: {error}"
+        self.metrics_registry.counter("server_requests",
+                                      status=rec["status"]).inc()
+        line = json.dumps(rec)
+        with self._log_lock:
+            with open(self.request_log, "a") as f:
+                f.write(line + "\n")
 
     def _routes_to_dist(self, plan: JoinPlan, gdb: GraphDB) -> bool:
         return (self.dist_edge_threshold is not None
@@ -294,9 +362,21 @@ class QueryServer:
 
     def _rows_result(self, req: QueryRequest, cur: ResultCursor,
                      label: str, plan: JoinPlan | None, cached: bool,
-                     token: str | None, t0: float) -> QueryResult:
-        page = cur.take(req.limit if req.limit is not None
-                        else self.page_rows)
+                     token: str | None, t0: float,
+                     trace_id: str | None = None) -> QueryResult:
+        # per-page profile: the enumeration kernels (segment_outer)
+        # dispatch inside take(), so the activation brackets it
+        prof = (DeviceProfile(req.query_name, label) if req.profile
+                else None)
+        with contextlib.ExitStack() as stack:
+            if prof is not None:
+                stack.enter_context(prof.activate())
+            page = cur.take(req.limit if req.limit is not None
+                            else self.page_rows)
+        if prof is not None:
+            prof.set_meta(engine=label, tenant=req.tenant,
+                          trace_id=trace_id)
+            prof.publish(registry=self.metrics_registry)
         if cur.exhausted:
             if token is not None:
                 self._close_cursor(token, "exhausted")
@@ -306,7 +386,7 @@ class QueryServer:
         return QueryResult(req, int(page.shape[0]), label,
                            time.time() - t0, plan=plan, plan_cached=cached,
                            rows=page, row_vars=cur.vars, next_cursor=token,
-                           stats=self._result_stats())
+                           stats=self._result_stats(), profile=prof)
 
     def execute(self, req: QueryRequest) -> QueryResult:
         """Run one request to completion (or to one cursor page).
@@ -342,6 +422,17 @@ class QueryServer:
         request to completion and a heavy one will block the caller.
         """
         t0 = time.time()
+        trace_id = self._next_trace_id()
+        try:
+            res = self._execute_impl(req, t0, trace_id)
+        except Exception as e:
+            self._log_request(trace_id, req, t0, error=e)
+            raise
+        self._log_request(trace_id, req, t0, result=res)
+        return res
+
+    def _execute_impl(self, req: QueryRequest, t0: float,
+                      trace_id: str) -> QueryResult:
         if req.cursor is not None:
             try:
                 cur, label, plan = self._cursors[req.cursor]
@@ -360,24 +451,37 @@ class QueryServer:
                 raise ValueError(
                     f"unknown cursor {req.cursor!r}") from None
             return self._rows_result(req, cur, label, plan, True,
-                                     req.cursor, t0)
+                                     req.cursor, t0, trace_id)
         sel = req.selectivity or self.default_selectivity
         gdb = self._gdb_for(sel, req.seed)
         if req.wants_rows:
             plan, cached = self._plan_for(req, gdb, output="rows")
             cur, label = self._open_cursor(plan, gdb, req)
             return self._rows_result(req, cur, label, plan, cached,
-                                     None, t0)
+                                     None, t0, trace_id)
         plan, cached = self._plan_for(req, gdb)
-        if req.trace:
-            tr = QueryTrace(req.query_name, plan.gao, plan.engine)
-            with tr.activate():
+        if req.trace or req.profile:
+            tr = (QueryTrace(req.query_name, plan.gao, plan.engine)
+                  if req.trace else None)
+            prof = (DeviceProfile(req.query_name, plan.engine)
+                    if req.profile else None)
+            with contextlib.ExitStack() as stack:
+                if tr is not None:
+                    stack.enter_context(tr.activate())
+                if prof is not None:
+                    stack.enter_context(prof.activate())
                 c, label, estats = self._execute_plan(plan, gdb, req)
-            tr.set_meta(engine=label, tenant=req.tenant,
-                        plan_cached=cached)
+            if tr is not None:
+                tr.set_meta(engine=label, tenant=req.tenant,
+                            plan_cached=cached, trace_id=trace_id)
+            if prof is not None:
+                prof.set_meta(engine=label, tenant=req.tenant,
+                              trace_id=trace_id)
+                prof.publish(trace=tr, registry=self.metrics_registry)
             return QueryResult(req, c, label, time.time() - t0,
                                plan=plan, plan_cached=cached,
-                               stats=self._result_stats(estats), trace=tr)
+                               stats=self._result_stats(estats), trace=tr,
+                               profile=prof)
         c, label, estats = self._execute_plan(plan, gdb, req)
         return QueryResult(req, c, label, time.time() - t0,
                            plan=plan, plan_cached=cached,

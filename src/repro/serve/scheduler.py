@@ -49,7 +49,7 @@ import numpy as np
 
 from ..core import VLFTJ, get_query
 from ..core.plan import pow2ceil
-from ..obs import QueryTrace
+from ..obs import DeviceProfile, QueryTrace
 from ..results import ResultCursor
 from .query_server import QueryRequest, QueryResult, QueryServer
 
@@ -217,7 +217,7 @@ class _Job:
                  "budget", "executor", "window", "collect_rows", "pages",
                  "rows_collected", "quanta", "preemptions", "restarts",
                  "parked_nbytes", "t_submit", "vclock_submit", "result",
-                 "seq", "trace", "quantum_rows_initial")
+                 "seq", "trace", "profile", "quantum_rows_initial")
 
     def __init__(self, jid: int, req: QueryRequest, plan, gdb, label,
                  budget: QuantumBudget, collect_rows: bool, vclock: int):
@@ -247,6 +247,12 @@ class _Job:
         self.trace: QueryTrace | None = (
             QueryTrace(req.query_name, plan.gao, plan.engine)
             if req.trace else None)
+        # per-job device profile (req.profile): jit compiles recorded
+        # while this job runs carry a per-quantum attribution label
+        # (``sched-<id>/q<k>``), set by the scheduler around each slice
+        self.profile: DeviceProfile | None = (
+            DeviceProfile(req.query_name, plan.engine)
+            if req.profile else None)
         self.quantum_rows_initial = budget.quantum_rows
 
 
@@ -462,11 +468,14 @@ class QuantumScheduler:
                          preemptions=job.preemptions,
                          restarts=job.restarts,
                          rows_expanded=job.budget.total_rows)
+        if job.profile is not None:
+            job.profile.publish(trace=trace,
+                                registry=self.server.metrics_registry)
         job.result = QueryResult(
             job.req, count, job.label, time.time() - job.t_submit,
             plan=job.plan, rows=rows,
             row_vars=job.plan.gao if rows is not None else None,
-            next_cursor=next_cursor, trace=trace,
+            next_cursor=next_cursor, trace=trace, profile=job.profile,
             stats={"quanta": job.quanta, "preemptions": job.preemptions,
                    "restarts": job.restarts,
                    "rows_expanded": job.budget.total_rows,
@@ -506,10 +515,17 @@ class QuantumScheduler:
         self.server.metrics_registry.counter("scheduler_quanta").inc()
         job.budget.refill()
         before = job.budget.total_rows
-        ctx = (job.trace.activate() if job.trace is not None
-               else contextlib.nullcontext())
         try:
-            with ctx:
+            with contextlib.ExitStack() as stack:
+                if job.trace is not None:
+                    stack.enter_context(job.trace.activate())
+                if job.profile is not None:
+                    # per-quantum compile attribution: any jit compile
+                    # this slice triggers is labelled with the job and
+                    # quantum that paid for it
+                    stack.enter_context(job.profile.activate())
+                    stack.enter_context(job.profile.attribute(
+                        f"{job.token}/q{job.quanta}"))
                 done = self._advance(job)
         except Preempted as p:
             job.preemptions += 1

@@ -1,0 +1,229 @@
+"""CI perf-regression gate: latest bench history run vs committed baseline.
+
+Reads the append-only ``BENCH_history.jsonl`` written by
+``benchmarks/run.py``, takes the **latest run** (max ``ts`` among
+``run_id`` groups), and diffs it against the committed
+``BENCH_baseline.json`` snapshot.  Two failure classes:
+
+* **wall regression** — a record's ``us_per_call`` exceeds the baseline
+  by more than ``--threshold`` (default 1.3x).  Sub-``--min-us``
+  measurements (default 200us) are skipped: at that scale the container
+  scheduler jitter swamps any real signal.  A record that was finite in
+  the baseline but timed out (null wall) in the run always fails.
+* **parity drift** — a record's ``count`` differs from the baseline's.
+  Counts are exact join cardinalities on seeded graphs; any drift is a
+  correctness bug wearing a perf costume, so there is no tolerance.
+
+``--calibrate`` divides every wall ratio by the **median** ratio across
+all compared records before applying the threshold.  Raw wall clocks
+shift fleet-wide between machines and process contexts (a subset run
+pays cold XLA compiles the full baseline run amortized; CI runners are
+not the baseline box) — the median captures that shared drift, and a
+genuine regression still sticks out because it moves one record, not
+the fleet.  Calibration needs ``>= 8`` comparable records to trust the
+median; below that it is a no-op.  Count parity is never calibrated.
+
+Records present on only one side are reported but do not fail the gate
+(benches get added and retired; the baseline refresh is a deliberate
+commit).  Mixed ``schema`` versions refuse to compare.
+
+``--self-test`` proves the gate can fail: it clones the baseline into a
+synthetic history run with one record slowed 2x, runs the comparison
+in-process, and exits 0 iff that regression is caught.
+
+Usage::
+
+    python tools/bench_compare.py --baseline BENCH_baseline.json \
+        --history BENCH_history.jsonl [--threshold 1.3] [--min-us 200]
+    python tools/bench_compare.py --self-test --baseline BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def load_baseline(path: str) -> dict:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if "records" not in doc:
+        raise SystemExit(f"{path}: not a baseline file (no 'records')")
+    return doc
+
+
+def latest_run(history_path: str) -> tuple[dict, list[dict]]:
+    """(header-ish fields, records) of the most recent run in the log."""
+    runs: dict[str, list[dict]] = {}
+    with open(history_path) as fh:
+        for ln, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{history_path}:{ln}: bad JSON: {e}")
+            runs.setdefault(rec.get("run_id", "?"), []).append(rec)
+    if not runs:
+        raise SystemExit(f"{history_path}: empty history")
+    run_id = max(runs, key=lambda r: max(x.get("ts", 0) for x in runs[r]))
+    recs = runs[run_id]
+    hdr = {k: recs[0].get(k) for k in ("schema", "run_id", "ts", "git",
+                                       "quick")}
+    return hdr, recs
+
+
+def key(rec: dict) -> tuple[str, str]:
+    return (rec.get("bench", ""), rec.get("name", ""))
+
+
+def compare(baseline: dict, run_hdr: dict, run_recs: list[dict],
+            threshold: float = 1.3, min_us: float = 200.0,
+            calibrate: bool = False) -> tuple[list[str], list[str]]:
+    """(failures, notes) — the gate fails iff ``failures`` is non-empty."""
+    failures: list[str] = []
+    notes: list[str] = []
+    if baseline.get("schema") != run_hdr.get("schema"):
+        failures.append(
+            f"schema mismatch: baseline={baseline.get('schema')} "
+            f"run={run_hdr.get('schema')} — refresh the baseline")
+        return failures, notes
+    if baseline.get("quick") != run_hdr.get("quick"):
+        notes.append(
+            f"profile mismatch (baseline quick={baseline.get('quick')}, "
+            f"run quick={run_hdr.get('quick')}): wall ratios unreliable")
+    base = {key(r): r for r in baseline["records"]}
+    run = {key(r): r for r in run_recs}
+    for k in sorted(base.keys() - run.keys()):
+        notes.append(f"missing from run: {k[0]}/{k[1]}")
+    for k in sorted(run.keys() - base.keys()):
+        notes.append(f"new (not in baseline): {k[0]}/{k[1]}")
+    # fleet-wide drift: median wall ratio over the comparable pairs
+    drift = 1.0
+    if calibrate:
+        ratios = []
+        for k in base.keys() & run.keys():
+            bw = base[k].get("us_per_call")
+            rw = run[k].get("us_per_call")
+            if bw is not None and rw is not None and bw > 0 \
+                    and max(bw, rw) >= min_us:
+                ratios.append(rw / bw)
+        if len(ratios) >= 8:    # too few pairs: the median IS the signal
+            drift = statistics.median(ratios)
+            notes.append(f"calibrated: median drift {drift:.2f}x "
+                         f"over {len(ratios)} records divided out")
+        else:
+            notes.append(f"calibration skipped: only {len(ratios)} "
+                         f"comparable records (< 8)")
+    for k in sorted(base.keys() & run.keys()):
+        b, r = base[k], run[k]
+        label = f"{k[0]}/{k[1]}"
+        # parity: exact counts on seeded graphs — zero tolerance
+        if b.get("count") is not None and r.get("count") is not None \
+                and b["count"] != r["count"]:
+            failures.append(
+                f"PARITY {label}: count {b['count']} -> {r['count']}")
+        bw, rw = b.get("us_per_call"), r.get("us_per_call")
+        if bw is None and rw is None:
+            continue            # both timed out / blowup rows: stable
+        if bw is not None and rw is None:
+            failures.append(
+                f"WALL {label}: {bw:.0f}us -> timeout/inf")
+            continue
+        if bw is None and rw is not None:
+            notes.append(f"recovered {label}: inf -> {rw:.0f}us")
+            continue
+        if max(bw, rw) < min_us:
+            continue            # below the noise floor: skip
+        ratio = (rw / bw) / drift
+        if ratio > threshold:
+            failures.append(
+                f"WALL {label}: {bw:.0f}us -> {rw:.0f}us "
+                f"({ratio:.2f}x > {threshold:.2f}x"
+                + (f" after {drift:.2f}x drift" if drift != 1.0 else "")
+                + ")")
+        elif 1.0 / ratio > threshold:
+            notes.append(
+                f"improved {label}: {bw:.0f}us -> {rw:.0f}us "
+                f"({1.0 / ratio:.2f}x faster)")
+    return failures, notes
+
+
+def self_test(baseline: dict, threshold: float, min_us: float) -> int:
+    """Inject a synthetic 2x slowdown and require the gate to fail."""
+    timed = [r for r in baseline["records"]
+             if r.get("us_per_call") is not None
+             and r["us_per_call"] >= min_us]
+    if not timed:
+        print("self-test: no baseline record above the noise floor",
+              file=sys.stderr)
+        return 1
+    victim = key(timed[0])
+    hdr = {"schema": baseline.get("schema"), "run_id": "selftest",
+           "ts": baseline.get("ts", 0), "quick": baseline.get("quick")}
+    fake = []
+    for r in baseline["records"]:
+        r = dict(r)
+        if key(r) == victim:
+            r["us_per_call"] = r["us_per_call"] * 2.0
+        fake.append(r)
+    failures, _ = compare(baseline, hdr, fake, threshold, min_us)
+    want = f"WALL {victim[0]}/{victim[1]}"
+    caught = any(f.startswith(want) for f in failures)
+    # the clean clone must also PASS — a gate that always fails is
+    # as useless as one that never does
+    clean, _ = compare(baseline, hdr, [dict(r) for r in baseline["records"]],
+                       threshold, min_us)
+    if caught and not clean:
+        print(f"self-test OK: injected 2x slowdown on "
+              f"{victim[0]}/{victim[1]} caught; clean clone passes")
+        return 0
+    print(f"self-test FAILED: caught={caught} "
+          f"clean_failures={clean}", file=sys.stderr)
+    return 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="max allowed wall ratio run/baseline "
+                         "(default 1.3)")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="ignore wall deltas when both sides are below "
+                         "this (scheduler-jitter noise floor)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="divide wall ratios by the fleet-median drift "
+                         "before thresholding (cross-machine / "
+                         "cold-vs-warm robustness)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="inject a synthetic 2x slowdown and verify "
+                         "the gate fails on it")
+    args = ap.parse_args()
+    baseline = load_baseline(args.baseline)
+    if args.self_test:
+        return self_test(baseline, args.threshold, args.min_us)
+    hdr, recs = latest_run(args.history)
+    failures, notes = compare(baseline, hdr, recs,
+                              args.threshold, args.min_us,
+                              calibrate=args.calibrate)
+    print(f"bench_compare: run {hdr['run_id']} "
+          f"({len(recs)} records) vs baseline "
+          f"{baseline.get('run_id')} ({len(baseline['records'])} records)")
+    for n in notes:
+        print(f"  note: {n}")
+    for f in failures:
+        print(f"  FAIL: {f}")
+    if failures:
+        print(f"bench_compare: {len(failures)} regression(s)",
+              file=sys.stderr)
+        return 1
+    print("bench_compare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,132 @@
+"""Inspect the append-only bench history log (``BENCH_history.jsonl``).
+
+Three read-only views over the lines ``benchmarks/run.py`` appends:
+
+* ``runs`` (default) — one line per run: run_id, timestamp, git rev,
+  quick/full profile, record count, bench modules covered.
+* ``tail`` — the records of the latest run (or ``--run <id>``), as
+  ``bench,name,us_per_call,count`` CSV.
+* ``trend --name <record-name>`` — that record's wall time across every
+  run that measured it, oldest first, with the ratio to the previous
+  run; the quickest way to see when a regression landed.
+
+Usage::
+
+    python tools/bench_history.py [runs|tail|trend] \
+        [--history BENCH_history.jsonl] [--run ID] [--name agm/3-clique]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def load(path: str) -> list[dict]:
+    recs = []
+    try:
+        with open(path) as fh:
+            for line in fh:
+                line = line.strip()
+                if line:
+                    recs.append(json.loads(line))
+    except FileNotFoundError:
+        raise SystemExit(f"{path}: no history yet "
+                         f"(run `python -m benchmarks.run` first)")
+    if not recs:
+        raise SystemExit(f"{path}: empty history")
+    return recs
+
+
+def by_run(recs: list[dict]) -> list[tuple[str, list[dict]]]:
+    """Runs ordered oldest -> newest by their records' max ts."""
+    runs: dict[str, list[dict]] = {}
+    for r in recs:
+        runs.setdefault(r.get("run_id", "?"), []).append(r)
+    return sorted(runs.items(),
+                  key=lambda kv: max(x.get("ts", 0) for x in kv[1]))
+
+
+def _fmt_ts(ts: float) -> str:
+    return time.strftime("%Y-%m-%d %H:%M:%S", time.gmtime(ts))
+
+
+def cmd_runs(runs: list[tuple[str, list[dict]]]) -> None:
+    print("run_id,ts_utc,git,profile,records,benches")
+    for run_id, rs in runs:
+        benches = sorted({r.get("bench", "?") for r in rs})
+        r0 = rs[0]
+        prof = "quick" if r0.get("quick") else "full"
+        print(f"{run_id},{_fmt_ts(max(x.get('ts', 0) for x in rs))},"
+              f"{r0.get('git') or '-'},{prof},{len(rs)},"
+              f"{'+'.join(benches)}")
+
+
+def cmd_tail(runs: list[tuple[str, list[dict]]], run_id: str | None) -> None:
+    if run_id is None:
+        run_id, rs = runs[-1]
+    else:
+        match = dict(runs)
+        if run_id not in match:
+            raise SystemExit(f"run {run_id!r} not in history "
+                             f"(see `bench_history.py runs`)")
+        rs = match[run_id]
+    print(f"# run {run_id}")
+    print("bench,name,us_per_call,count")
+    for r in rs:
+        us = r.get("us_per_call")
+        print(f"{r.get('bench')},{r.get('name')},"
+              f"{'inf' if us is None else f'{us:.1f}'},"
+              f"{r.get('count') if r.get('count') is not None else ''}")
+
+
+def cmd_trend(runs: list[tuple[str, list[dict]]], name: str) -> None:
+    print(f"# trend for {name}")
+    print("run_id,ts_utc,us_per_call,vs_prev")
+    prev = None
+    hits = 0
+    for run_id, rs in runs:
+        for r in rs:
+            if r.get("name") != name:
+                continue
+            hits += 1
+            us = r.get("us_per_call")
+            if us is None:
+                ratio = "inf"
+            elif prev:
+                ratio = f"{us / prev:.2f}x"
+            else:
+                ratio = "-"
+            print(f"{run_id},{_fmt_ts(r.get('ts', 0))},"
+                  f"{'inf' if us is None else f'{us:.1f}'},{ratio}")
+            if us is not None:
+                prev = us
+    if not hits:
+        raise SystemExit(f"no record named {name!r} in history")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cmd", nargs="?", default="runs",
+                    choices=["runs", "tail", "trend"])
+    ap.add_argument("--history", default="BENCH_history.jsonl")
+    ap.add_argument("--run", default=None,
+                    help="run_id for `tail` (default: latest)")
+    ap.add_argument("--name", default=None,
+                    help="record name for `trend`")
+    args = ap.parse_args()
+    runs = by_run(load(args.history))
+    if args.cmd == "runs":
+        cmd_runs(runs)
+    elif args.cmd == "tail":
+        cmd_tail(runs, args.run)
+    else:
+        if not args.name:
+            ap.error("trend requires --name")
+        cmd_trend(runs, args.name)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
