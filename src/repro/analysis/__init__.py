@@ -1,0 +1,34 @@
+"""``repro.analysis`` — static analyses gating execution and CI.
+
+Three passes, one reporting currency (:class:`Finding`):
+
+* :mod:`~repro.analysis.verifier` — static plan verification (rules
+  ``V101``–``V110``), enforced pre-dispatch via
+  :func:`verify_for_execution` (``verify=True`` default in
+  ``engine.count`` / ``enumerate`` / ``stream`` and the query server);
+* :mod:`~repro.analysis.recompile` — the jit-recompilation budget
+  auditor (``V107``), cross-checkable against ``DeviceProfile`` compile
+  counts at runtime;
+* ``tools/lint_repro.py`` — AST lint rules over the repo source,
+  reporting the same :class:`Finding` records.
+
+``python -m repro.analysis --tier1`` runs the verifier + auditor over
+the planner's output for every tier-1 query shape (the CI
+``static-analysis`` job); ``--self-test`` proves the gate fires.  Rule
+catalog and suppression syntax: ``docs/ANALYSIS.md``.
+"""
+from .findings import (SEVERITIES, Finding, FindingReport,
+                       PlanVerificationError, filter_suppressed)
+from .recompile import (DEFAULT_RECOMPILE_BUDGET, RecompileAudit,
+                        audit_recompilation, check_runtime)
+from .verifier import (filters_quotient_automorphism, verify_for_execution,
+                       verify_plan, verify_snapshot)
+
+__all__ = [
+    "Finding", "FindingReport", "PlanVerificationError", "SEVERITIES",
+    "filter_suppressed",
+    "RecompileAudit", "audit_recompilation", "check_runtime",
+    "DEFAULT_RECOMPILE_BUDGET",
+    "verify_plan", "verify_for_execution", "verify_snapshot",
+    "filters_quotient_automorphism",
+]

@@ -148,7 +148,12 @@ class BinaryJoin:
         # the pairwise baseline orders joins greedily at runtime; the plan
         # is carried for introspection/uniform dispatch only
         self.join_plan = plan
-        self.stats = {"max_intermediate": 0, "joins": 0}
+        # max_intermediate/joins are native; rows_expanded / level_rows
+        # source the unified schema (ENGINE_STATS_SOURCE_KEYS): each
+        # pairwise join feeds the current intermediate's rows into the
+        # merge, and level_rows records the intermediate after each join
+        self.stats = {"max_intermediate": 0, "joins": 0,
+                      "rows_expanded": 0, "level_rows": {}}
 
     def _estimate(self, inter_size: int, inter_vars, atom, rel_len: int,
                   distincts) -> float:
@@ -190,10 +195,12 @@ class BinaryJoin:
             atom = q.atoms[best]
             rel = db.relations[atom.rel]
             right = _Intermediate(atom.vars, rel.data)
+            self.stats["rows_expanded"] += len(inter)
             inter = _merge_join(inter, right, self.cap)
             self.stats["joins"] += 1
             self.stats["max_intermediate"] = max(
                 self.stats["max_intermediate"], len(inter))
+            self.stats["level_rows"][self.stats["joins"]] = len(inter)
             inter = _apply_filters(inter, q, applied)
             remaining.remove(best)
         return inter

@@ -111,8 +111,17 @@ def execute_stats(plan: JoinPlan, gdb: GraphDB, **kw) -> tuple[int, dict]:
 def _resolve_plan(query: Query, gdb: GraphDB, engine: str,
                   plan: JoinPlan | None, cache: PlanCache | None,
                   gao: tuple[str, ...] | None,
-                  output: str = "count") -> JoinPlan:
-    """Shared plan resolution for ``count``/``enumerate``/``stream``."""
+                  output: str = "count", verify: bool = True) -> JoinPlan:
+    """Shared plan resolution for ``count``/``enumerate``/``stream``.
+
+    With ``verify`` (the default) the resolved plan — planner-produced
+    or caller-supplied — passes static verification
+    (:func:`repro.analysis.verify_for_execution`) before any device
+    dispatch; error-severity findings raise
+    :class:`repro.analysis.PlanVerificationError`.  Verification is
+    memoized on ``(plan, stats fingerprint)``, so the steady-state cost
+    on the serving path is a dict lookup.
+    """
     if plan is None:
         if engine not in ENGINES:
             raise ValueError(
@@ -120,27 +129,35 @@ def _resolve_plan(query: Query, gdb: GraphDB, engine: str,
         stats = GraphStats.of(gdb)
         if gao is not None:
             # a pinned GAO bypasses the cache (keys don't carry the GAO)
-            return plan_query(query, stats, engine=engine, gao=gao,
+            plan = plan_query(query, stats, engine=engine, gao=gao,
                               output=output)
-        if cache is not None:
-            return cache.get_or_plan(query, stats, engine, output=output)
-        return plan_query(query, stats, engine=engine, output=output)
-    if (plan.query.atoms, plan.query.filters) != (query.atoms,
-                                                  query.filters):
-        raise ValueError(
-            f"plan was built for {plan.query.name!r}, not {query.name!r}")
-    if engine != "auto" and plan.engine != engine:
-        raise ValueError(f"plan uses engine {plan.engine!r} but "
-                         f"engine={engine!r} was requested")
-    if gao is not None and tuple(gao) != plan.gao:
-        raise ValueError("both plan= and a conflicting gao= given")
+        elif cache is not None:
+            plan = cache.get_or_plan(query, stats, engine, output=output)
+        else:
+            plan = plan_query(query, stats, engine=engine, output=output)
+    else:
+        if (plan.query.atoms, plan.query.filters) != (query.atoms,
+                                                      query.filters):
+            raise ValueError(
+                f"plan was built for {plan.query.name!r}, "
+                f"not {query.name!r}")
+        if engine != "auto" and plan.engine != engine:
+            raise ValueError(f"plan uses engine {plan.engine!r} but "
+                             f"engine={engine!r} was requested")
+        if gao is not None and tuple(gao) != plan.gao:
+            raise ValueError("both plan= and a conflicting gao= given")
+    if verify:
+        from ..analysis import verify_for_execution
+        verify_for_execution(plan, gdb)
     return plan
 
 
 def count(query: Query, gdb: GraphDB, engine: str = "auto",
           plan: JoinPlan | None = None, cache: PlanCache | None = None,
-          gao: tuple[str, ...] | None = None, **kw) -> int:
-    plan = _resolve_plan(query, gdb, engine, plan, cache, gao)
+          gao: tuple[str, ...] | None = None, verify: bool = True,
+          **kw) -> int:
+    plan = _resolve_plan(query, gdb, engine, plan, cache, gao,
+                         verify=verify)
     return execute(plan, gdb, **kw)
 
 
@@ -160,7 +177,7 @@ def enumerate(query: Query, gdb: GraphDB, engine: str = "auto",
               order: tuple[str, ...] | None = None,
               plan: JoinPlan | None = None, cache: PlanCache | None = None,
               gao: tuple[str, ...] | None = None,
-              mode: str | None = None, **kw):
+              mode: str | None = None, verify: bool = True, **kw):
     """Enumerate output tuples through the same planner path as ``count``.
 
     Returns a :class:`repro.results.ResultSet` (flat, the default) or a
@@ -172,7 +189,7 @@ def enumerate(query: Query, gdb: GraphDB, engine: str = "auto",
     """
     from ..results import FactorizedResult, ResultSet
     plan = _resolve_plan(query, gdb, engine, plan, cache, gao,
-                         output="rows")
+                         output="rows", verify=verify)
     target = tuple(order) if order is not None else query.variables
     if set(target) != set(query.variables):
         raise ValueError(f"order {target} does not cover the query "
@@ -204,7 +221,7 @@ def enumerate(query: Query, gdb: GraphDB, engine: str = "auto",
 
 def stream(query: Query, gdb: GraphDB, engine: str = "auto",
            page_rows: int = 1024, plan: JoinPlan | None = None,
-           cache: PlanCache | None = None, **kw):
+           cache: PlanCache | None = None, verify: bool = True, **kw):
     """A :class:`repro.results.ResultCursor` over the query's output.
 
     Vectorized-LFTJ plans stream with bounded memory (the final level is
@@ -213,7 +230,7 @@ def stream(query: Query, gdb: GraphDB, engine: str = "auto",
     engine's output order)."""
     from ..results import ResultCursor
     plan = _resolve_plan(query, gdb, engine, plan, cache, None,
-                         output="rows")
+                         output="rows", verify=verify)
     if plan.engine == "vlftj":
         return ResultCursor(VLFTJ(query, gdb, plan=plan, **kw),
                             page_rows=page_rows)

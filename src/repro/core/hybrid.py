@@ -77,11 +77,18 @@ class HybridJoin:
             self._core_plan = None
         # unified stats namespace (docs/OBSERVABILITY.md): the tree
         # pass's SpMV count plus the core executor's per-level stats,
-        # merged after count() runs
-        self.stats: dict = {"spmvs": 0}
+        # merged after count() runs.  rows_expanded / level_rows source
+        # the schema (ENGINE_STATS_SOURCE_KEYS) from construction on —
+        # the tree pass contributes its SpMV row work, the core its
+        # per-level frontiers.
+        self.stats: dict = {"spmvs": 0, "rows_expanded": 0,
+                            "level_rows": {}}
 
     def _absorb_core_stats(self, engine: VLFTJ) -> None:
+        tree_rows = self.stats.get("rows_expanded", 0)
         self.stats.update(engine.stats)
+        self.stats["rows_expanded"] = (
+            tree_rows + engine.stats.get("rows_expanded", 0))
 
     def count(self) -> int:
         d = self.join_plan.decomposition
@@ -100,6 +107,7 @@ class HybridJoin:
         if cy._cross_factor != 1:  # disconnected tree pieces: cross factor
             msg = msg * cy._cross_factor
         self.stats["spmvs"] = cy.stats.get("spmvs", 0)
+        self.stats["rows_expanded"] = cy.stats.get("rows_expanded", 0)
         seeds = np.flatnonzero(msg > 0).astype(np.int32)
         if seeds.size == 0:
             return 0

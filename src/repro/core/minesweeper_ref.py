@@ -270,8 +270,13 @@ class Minesweeper:
         # filters, applied as implicit constraints on free tuples
         self.filters = [(self.var_pos[f.left], self.var_pos[f.right])
                         for f in query.filters]
+        # probes/gaps/... are native; rows_expanded / level_rows source
+        # the unified schema (ENGINE_STATS_SOURCE_KEYS): each candidate
+        # free tuple is one unit of expansion work, and the final GAO
+        # level's observed cardinality is the output count
         self.stats = {"probes": 0, "gaps": 0, "outputs": 0,
-                      "free_tuples": 0, "probe_skips": 0}
+                      "free_tuples": 0, "probe_skips": 0,
+                      "rows_expanded": 0, "level_rows": {}}
         # Attributes range over the active domain [0, universe): any value
         # >= universe cannot participate in a join output, so the free-tuple
         # search treats it as exhausted.
@@ -396,6 +401,7 @@ class Minesweeper:
         last_gap: list[Constraint | None] = [None] * natoms
         while self._compute_free_tuple(cds, t):
             self.stats["free_tuples"] += 1
+            self.stats["rows_expanded"] += 1
             found_gap = False
             # implicit filter constraints first (cheap)
             fc = self._filter_gap(t)
@@ -445,6 +451,7 @@ class Minesweeper:
                     emit(tuple(t))
                 # Idea 2: move the frontier, do not insert a unit gap.
                 t[n - 1] += 1
+        self.stats["level_rows"][n - 1] = count
         return count
 
     def _advance_past(self, t: list[int], c: Constraint) -> None:

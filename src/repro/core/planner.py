@@ -37,11 +37,6 @@ from .plan import (GraphStats, HybridPlan, JoinPlan, compile_levels,
                    executor_geometry)
 from .query import Atom, Query
 
-#: engines the auto-planner will route to (the reference/baseline engines
-#: are only planned when explicitly requested).
-AUTO_ENGINES = ("yannakakis", "hybrid", "vlftj")
-
-
 # ---------------------------------------------------------------------------
 # cost model
 # ---------------------------------------------------------------------------

@@ -114,7 +114,11 @@ class CountingYannakakis:
         else:
             from .gao import choose_gao
             self.gao = choose_gao(query)
-        self.stats = {"spmvs": 0}
+        # spmvs is the native counter; rows_expanded / level_rows source
+        # the unified engine schema (obs/schema.ENGINE_STATS_SOURCE_KEYS):
+        # every SpMV propagates one message over the n_nodes id domain,
+        # and the root tally vector is the engine's one "frontier"
+        self.stats = {"spmvs": 0, "rows_expanded": 0, "level_rows": {}}
 
     def _unary_mask(self, var: str) -> jnp.ndarray:
         n = self.gdb.n_nodes
@@ -138,6 +142,7 @@ class CountingYannakakis:
                     continue
                 c_ch = up(ch, var)
                 self.stats["spmvs"] += 1
+                self.stats["rows_expanded"] += n
                 c = c * _spmv(indptr, indices, src_ids, c_ch,
                               num_segments=n)
             return c
@@ -145,6 +150,7 @@ class CountingYannakakis:
         # product over the root's own component; other components multiply
         # as scalar factors (cross products)
         comp_roots = self._component_roots(root)
+        self.stats["level_rows"][0] = n
         c_root = up(root, None)
         self._cross_factor = 1
         for r in comp_roots:
@@ -188,6 +194,7 @@ class CountingYannakakis:
                     continue
                 m = up(ch, var)
                 self.stats["spmvs"] += 1
+                self.stats["rows_expanded"] += n
                 c = c & (_spmv(indptr, indices, src_ids,
                                m.astype(jnp.int64), num_segments=n) > 0)
             if parent is not None:

@@ -291,8 +291,3 @@ class PartitionedJoin:
                 else np.zeros((0, len(self.executor.gao)), dtype=np.int64))
         return ResultSet(self.executor.gao,
                          rows if limit is None else rows[:limit])
-
-
-def partitioned_count(query: Query, gdb: GraphDB, n_workers: int = 4,
-                      granularity: int = 2, **kw) -> int:
-    return PartitionedJoin(query, gdb, n_workers, granularity, **kw).count()

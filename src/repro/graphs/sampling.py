@@ -59,10 +59,3 @@ class NeighborSampler:
             if frontier.size == 0:
                 frontier = np.zeros(1, dtype=np.int64)
         return hops
-
-
-def partition_domain(n: int, n_parts: int) -> np.ndarray:
-    """Contiguous [start, end) boundaries splitting [0, n) into n_parts —
-    the paper's §4.10 output-space partitioning (with the granularity
-    factor applied by the caller as n_parts = workers * f)."""
-    return np.linspace(0, n, n_parts + 1).astype(np.int64)

@@ -31,14 +31,6 @@ def searchsorted_segments(values, lo, hi, queries, n_iter: int,
                                           n_iter=n_iter, unroll=unroll)
 
 
-def intersect_count(a, a_len, b, b_len):
-    if _USE_PALLAS:
-        from .intersect import intersect_count_pallas
-        return intersect_count_pallas(a, a_len, b, b_len,
-                                      interpret=_INTERPRET)
-    return _ref.intersect_count_ref(a, a_len, b, b_len)
-
-
 def bitset_intersect_count(a_words, b_words):
     if _USE_PALLAS:
         from .intersect_bitset import bitset_intersect_count_pallas
@@ -53,12 +45,6 @@ def bitset_member_count(words, b, b_len):
         return bitset_member_count_pallas(words, b, b_len,
                                           interpret=_INTERPRET)
     return _ref.bitset_member_count_ref(words, b, b_len)
-
-
-def bitset_member(words, queries):
-    """(R, Q) bool membership mask — the hybrid engine's inline check
-    (ref-only: the kernels above cover the counting contract)."""
-    return _ref.bitset_member_ref(words, queries)
 
 
 def flash_attention(q, k, v, causal: bool = True, scale=None):

@@ -17,15 +17,3 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(data: int | None = None, model: int = 1):
-    """Best-effort mesh from the actually available devices (elastic path:
-    tests run with 8 host devices; the container default is 1)."""
-    n = len(jax.devices())
-    model = min(model, n)
-    data = data if data is not None else n // model
-    return jax.make_mesh((data, model), ("data", "model"))
-
-
-def data_axes(mesh) -> tuple[str, ...]:
-    """Axes over which the batch is sharded (pod composes with data)."""
-    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -348,16 +348,6 @@ def loss_fn(params, batch, cfg: TransformerConfig, mesh=None):
 # serving: prefill + decode with KV cache
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: TransformerConfig, batch: int, max_len: int | None = None):
-    ml = max_len or cfg.max_cache_len
-    hkv, dh, l = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
-    return {
-        "k": jnp.zeros((l, batch, hkv, ml, dh), cfg.dtype),
-        "v": jnp.zeros((l, batch, hkv, ml, dh), cfg.dtype),
-        "len": jnp.zeros((), jnp.int32),
-    }
-
-
 def cache_specs(cfg: TransformerConfig, mesh) -> dict:
     """KV cache: batch over (pod,data); heads over model when divisible,
     else the sequence dim (flash-decoding split-K sharding)."""

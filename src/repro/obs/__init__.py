@@ -26,12 +26,14 @@ from .metrics import (Counter, DEFAULT_BUCKETS, Gauge, Histogram,
                       MetricsRegistry, get_registry)
 from .profile import (DeviceProfile, KERNEL_FAMILIES, NULL_PROFILE,
                       NullProfile, PROFILE_SCHEMA_VERSION, current_profile)
-from .schema import ENGINE_REQUIRED_KEYS, normalize_engine_stats
+from .schema import (ENGINE_REQUIRED_KEYS, ENGINE_STATS_SOURCE_KEYS,
+                     normalize_engine_stats)
 from .trace import (NULL_TRACE, NullTrace, QueryTrace, TRACE_SCHEMA_VERSION,
                     current_trace, qerror)
 
 __all__ = [
     "Counter", "DEFAULT_BUCKETS", "DeviceProfile", "ENGINE_REQUIRED_KEYS",
+    "ENGINE_STATS_SOURCE_KEYS",
     "ExplainResult", "Gauge", "Histogram", "KERNEL_FAMILIES",
     "MetricsRegistry", "NULL_PROFILE", "NULL_TRACE", "NullProfile",
     "NullTrace", "PROFILE_SCHEMA_VERSION", "QueryTrace",

@@ -31,12 +31,19 @@ from .trace import QueryTrace
 
 @dataclass
 class ExplainResult:
-    """The outcome of one ``explain_analyze`` run."""
+    """The outcome of one ``explain_analyze`` run.
+
+    ``verification`` carries the static plan verifier's findings
+    (:class:`repro.analysis.Finding`) — EXPLAIN ANALYZE *surfaces* them
+    (including errors, rendered under the plan tree) rather than
+    raising, so a rejected plan can still be inspected.
+    """
 
     plan: JoinPlan
     count: int
     trace: QueryTrace
     engine_stats: dict = field(default_factory=dict)
+    verification: list = field(default_factory=list)
 
     @property
     def levels(self) -> list[dict]:
@@ -77,6 +84,8 @@ class ExplainResult:
         mq = self.max_q_error
         lines.append("  max q-error " +
                      ("inf" if math.isinf(mq) else f"{mq:.2f}"))
+        for f in self.verification:
+            lines.append(f"  verify: {f.severity} [{f.rule}] {f.message}")
         return "\n".join(lines)
 
     def __str__(self) -> str:
@@ -91,8 +100,16 @@ def explain_analyze(query: Query, gdb, engine: str = "auto",
     :func:`repro.core.engine.count`."""
     if plan is None:
         plan = plan_query(query, GraphStats.of(gdb), engine=engine)
+    # surface static verification through the result instead of raising:
+    # EXPLAIN exists to inspect plans, including ones the executor would
+    # reject (engine.count's verify=True path raises on the same errors)
+    from ..analysis import PlanVerificationError, verify_for_execution
+    try:
+        findings = verify_for_execution(plan, gdb)
+    except PlanVerificationError as e:
+        findings = e.findings
     trace = QueryTrace(query.name, plan.gao, plan.engine)
     with trace.activate():
         count, stats = execute_stats(plan, gdb, **kw)
     return ExplainResult(plan=plan, count=count, trace=trace,
-                         engine_stats=stats)
+                         engine_stats=stats, verification=list(findings))

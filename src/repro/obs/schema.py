@@ -37,6 +37,14 @@ ENGINE_REQUIRED_KEYS = ("name", "rows_expanded", "frontier_peak",
                         "kernel_dispatches", "jit_calls", "jit_compiles",
                         "level_rows", "level_wall_s", "level_paths", "raw")
 
+#: the schema keys an engine must *source* natively (everything else
+#: has a total default in :func:`normalize_engine_stats`): without
+#: ``rows_expanded`` the quantum scheduler cannot meter the engine, and
+#: without ``level_rows`` per-level Q-error has no "obs" side.  The
+#: ``engine-stats-keys`` lint pass (``tools/lint_repro.py``) requires
+#: both in every engine's ``self.stats`` dict literal.
+ENGINE_STATS_SOURCE_KEYS = ("rows_expanded", "level_rows")
+
 
 def normalize_engine_stats(name: str, stats: dict | None) -> dict:
     """Project an engine's native ``stats`` dict onto the unified schema.

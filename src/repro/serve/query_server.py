@@ -329,7 +329,15 @@ class QueryServer:
 
     def _plan_for(self, req: QueryRequest, gdb: GraphDB,
                   output: str = "count") -> tuple[JoinPlan, bool]:
-        """(plan, was_cache_hit) for one request."""
+        """(plan, was_cache_hit) for one request.
+
+        Every served plan passes static verification
+        (:func:`repro.analysis.verify_for_execution`) before dispatch;
+        a :class:`repro.analysis.PlanVerificationError` propagates to
+        the request's error result.  Verification memoizes on
+        ``(plan, stats fingerprint)``, so cache hits re-verify at dict
+        cost."""
+        from ..analysis import verify_for_execution
         q = get_query(req.query_name)
         stats = self._stats_for(gdb)
         hits_before = self.plan_cache.hits
@@ -338,6 +346,7 @@ class QueryServer:
         hit = self.plan_cache.hits > hits_before
         self.metrics_registry.counter(
             "server_plan_cache", outcome="hit" if hit else "miss").inc()
+        verify_for_execution(plan, gdb)
         return plan, hit
 
     def plan_cache_info(self) -> dict:

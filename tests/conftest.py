@@ -1,8 +1,23 @@
+import importlib.util
+import os
+
 import pytest
 
 import repro  # noqa: F401  (enables x64; device count stays at 1 here)
 from repro.core import GraphDB
 from repro.graphs import node_sample, powerlaw_cluster
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def load_lint_module():
+    """Import ``tools/lint_repro.py`` (not a package) for rule-level
+    tests and the static/runtime agreement guards."""
+    path = os.path.join(REPO_ROOT, "tools", "lint_repro.py")
+    spec = importlib.util.spec_from_file_location("lint_repro", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def make_gdb(n=60, m_per_node=3, seed=0, selectivity=4, n_samples=4):

@@ -107,6 +107,18 @@ def test_disabled_tracer_adds_zero_device_dispatches(gdb):
         assert on["raw"][meter] == off["raw"][meter], meter
     assert on["kernel_dispatches"] == off["kernel_dispatches"]
     assert on["jit_calls"] == off["jit_calls"]
+    # static agreement: the obs-device-free lint pass proves the same
+    # property by construction — the harvest modules never touch jax,
+    # so the runtime meter parity above is not a coincidence of this
+    # query shape
+    import ast as ast_mod
+    from conftest import REPO_ROOT, load_lint_module
+    lint = load_lint_module()
+    rule = lint.ObsHostPurity()
+    import os
+    for rel in rule.scope:
+        src = open(os.path.join(REPO_ROOT, rel), encoding="utf-8").read()
+        assert rule.check(ast_mod.parse(src), rel, src) == [], rel
 
 
 def test_vlftj_levels_carry_est_obs_and_paths(gdb):

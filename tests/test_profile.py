@@ -91,6 +91,17 @@ def test_disabled_profile_adds_zero_device_dispatches(gdb):
         assert on["raw"][meter] == off["raw"][meter], meter
     assert on["kernel_dispatches"] == off["kernel_dispatches"]
     assert on["jit_calls"] == off["jit_calls"]
+    # static agreement: the obs harvest path (trace/schema/metrics) is
+    # jax-free per the obs-device-free lint pass, so turning profiling
+    # on cannot introduce device work through the harvest side either
+    import ast as ast_mod
+    import os
+    from conftest import REPO_ROOT, load_lint_module
+    lint = load_lint_module()
+    rule = lint.ObsHostPurity()
+    for rel in rule.scope:
+        src = open(os.path.join(REPO_ROOT, rel), encoding="utf-8").read()
+        assert rule.check(ast_mod.parse(src), rel, src) == [], rel
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,585 @@
+"""AST lint passes encoding this repo's cross-module invariants.
+
+``ruff`` covers generic Python hygiene; these rules cover contracts no
+generic linter knows about — the ones PRs 8/9 could only enforce with
+runtime meter-comparison tests:
+
+==========================  ==============================================
+rule id                     invariant
+==========================  ==============================================
+``obs-device-free``         the obs host-side harvest path
+                            (``obs/trace.py``, ``obs/schema.py``,
+                            ``obs/metrics.py``) never imports or touches
+                            ``jax`` — observability must add zero device
+                            dispatches
+``engine-stats-keys``       every engine's ``self.stats`` dict literal
+                            sources every ``ENGINE_STATS_SOURCE_KEYS``
+                            entry (``rows_expanded``, ``level_rows``) —
+                            the scheduler meters on the first, Q-error
+                            needs the second
+``contextvar-pairing``      every ``ContextVar.set()`` is paired with a
+                            ``reset()`` in an enclosing ``finally`` —
+                            an unpaired activation leaks trace/profile
+                            state across requests
+``snapshot-no-pickle``      snapshot/serialization paths (``serve/``,
+                            ``results/``) never use ``pickle`` and
+                            always pass ``allow_pickle=False`` to
+                            ``np.save``/``np.load``
+``quantum-wallclock``       quantum-metering code (``*Budget`` classes,
+                            ``charge`` methods) never reads wall clocks
+                            — preemption must be deterministic and
+                            replayable
+``unused-public-symbol``    (note) module-level public symbols in
+                            ``src/repro`` nobody references from source,
+                            tests, benchmarks, tools, or docs
+==========================  ==============================================
+
+All findings report through :class:`repro.analysis.Finding` — the same
+record the static plan verifier emits — and the JSON document matches
+``python -m repro.analysis``'s, so CI's ``static-analysis`` job uploads
+one artifact schema.  Suppress a finding by appending
+``# repro: noqa-<rule-id>`` to its line.  ``--self-test`` runs every
+rule against its embedded good/bad fixtures and requires the bad one to
+fire and the good one to pass (mirroring ``tools/bench_compare.py``).
+
+Usage::
+
+    python tools/lint_repro.py [--format=json] [--out findings.json]
+    python tools/lint_repro.py --self-test
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis import Finding, FindingReport, filter_suppressed  # noqa: E402
+from repro.obs.schema import ENGINE_STATS_SOURCE_KEYS  # noqa: E402
+
+
+def _parents(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    par: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            par[child] = node
+    return par
+
+
+def _dotted(node: ast.AST) -> str:
+    """'a.b.c' for an Attribute/Name chain, '' otherwise."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class Rule:
+    """One lint rule: an id, a path scope, a per-file AST check, and
+    embedded good/bad fixtures driving ``--self-test``."""
+
+    id: str = ""
+    severity: str = "error"
+    #: self-test fixtures: ``bad`` must fire, ``good`` must not.
+    good: str = ""
+    bad: str = ""
+    #: path used when checking fixtures (rules scope by path)
+    fixture_path: str = ""
+
+    def applies(self, path: str) -> bool:
+        raise NotImplementedError
+
+    def check(self, tree: ast.Module, path: str, source: str
+              ) -> list[Finding]:
+        raise NotImplementedError
+
+
+class ObsHostPurity(Rule):
+    """obs-device-free: no jax reachable from obs host-side harvest code.
+
+    ``obs/profile.py`` is deliberately out of scope — it *is* the device
+    accounting layer (``sample_memory`` reads live-buffer metadata).
+    The harvest/trace/metrics path must stay importable and runnable
+    with zero device work.
+    """
+
+    id = "obs-device-free"
+    scope = ("src/repro/obs/trace.py", "src/repro/obs/schema.py",
+             "src/repro/obs/metrics.py")
+    fixture_path = "src/repro/obs/trace.py"
+    good = "import numpy as np\n\ndef harvest(stats):\n    return dict(stats)\n"
+    bad = ("import jax.numpy as jnp\n\n"
+           "def harvest(stats):\n    return jnp.sum(stats)\n")
+
+    def applies(self, path: str) -> bool:
+        return path.replace(os.sep, "/") in self.scope
+
+    def check(self, tree, path, source):
+        out = []
+        for node in ast.walk(tree):
+            offender = None
+            if isinstance(node, ast.Import):
+                offender = next((a.name for a in node.names
+                                 if a.name.split(".")[0] in ("jax",
+                                                             "jaxlib")),
+                                None)
+            elif isinstance(node, ast.ImportFrom):
+                root = (node.module or "").split(".")[0]
+                if root in ("jax", "jaxlib"):
+                    offender = node.module
+            elif isinstance(node, ast.Name) and node.id in ("jax", "jnp"):
+                offender = node.id
+            if offender:
+                out.append(Finding(
+                    self.id, self.severity, path, node.lineno,
+                    f"obs host-side harvest code touches {offender!r} — "
+                    f"observability must add zero device dispatches",
+                    "keep device accounting in obs/profile.py; harvest "
+                    "host dicts/numpy only"))
+        return out
+
+
+class EngineStatsSchema(Rule):
+    """engine-stats-keys: engine ``self.stats`` literals source the
+    mandatory schema keys."""
+
+    id = "engine-stats-keys"
+    fixture_path = "src/repro/core/fixture_engine.py"
+    good = ("class GoodEngine:\n"
+            "    def __init__(self):\n"
+            "        self.stats = {'rows_expanded': 0, 'level_rows': {},\n"
+            "                      'probes': 0}\n"
+            "    def count(self):\n"
+            "        return 0\n")
+    bad = ("class BadEngine:\n"
+           "    def __init__(self):\n"
+           "        self.stats = {'probes': 0}\n"
+           "    def count(self):\n"
+           "        return 0\n")
+
+    def applies(self, path: str) -> bool:
+        p = path.replace(os.sep, "/")
+        return p.startswith("src/repro/core/") and p.endswith(".py")
+
+    def check(self, tree, path, source):
+        out = []
+        for cls in ast.walk(tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            has_count = any(isinstance(n, ast.FunctionDef)
+                            and n.name == "count" for n in cls.body)
+            if not has_count:
+                continue
+            for node in ast.walk(cls):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                    target, value = node.targets[0], node.value
+                elif isinstance(node, ast.AnnAssign):
+                    target, value = node.target, node.value
+                else:
+                    continue
+                if _dotted(target) != "self.stats" \
+                        or not isinstance(value, ast.Dict):
+                    continue
+                keys = {k.value for k in value.keys
+                        if isinstance(k, ast.Constant)}
+                missing = [k for k in ENGINE_STATS_SOURCE_KEYS
+                           if k not in keys]
+                if missing:
+                    out.append(Finding(
+                        self.id, self.severity, path, node.lineno,
+                        f"{cls.name}.stats literal is missing schema "
+                        f"key(s) {missing} "
+                        f"(ENGINE_STATS_SOURCE_KEYS)",
+                        "initialize every source key in the literal and "
+                        "maintain it during execution — the scheduler "
+                        "meters rows_expanded; Q-error needs "
+                        "level_rows"))
+        return out
+
+
+class ContextvarPairing(Rule):
+    """contextvar-pairing: every ContextVar ``.set()`` has a ``.reset()``
+    in an enclosing ``finally`` block of the same function."""
+
+    id = "contextvar-pairing"
+    fixture_path = "src/repro/obs/fixture_ctx.py"
+    good = ("from contextvars import ContextVar\n"
+            "_ACTIVE = ContextVar('active', default=None)\n\n"
+            "def activate(tr):\n"
+            "    token = _ACTIVE.set(tr)\n"
+            "    try:\n"
+            "        yield tr\n"
+            "    finally:\n"
+            "        _ACTIVE.reset(token)\n")
+    bad = ("from contextvars import ContextVar\n"
+           "_ACTIVE = ContextVar('active', default=None)\n\n"
+           "def activate(tr):\n"
+           "    _ACTIVE.set(tr)\n"
+           "    return tr\n")
+
+    def applies(self, path: str) -> bool:
+        p = path.replace(os.sep, "/")
+        return p.startswith("src/repro/") and p.endswith(".py")
+
+    def check(self, tree, path, source):
+        ctxvars = {t.id for node in ast.walk(tree)
+                   if isinstance(node, ast.Assign)
+                   and isinstance(node.value, ast.Call)
+                   and _dotted(node.value.func).split(".")[-1]
+                   == "ContextVar"
+                   for t in node.targets if isinstance(t, ast.Name)}
+        if not ctxvars:
+            return []
+        par = _parents(tree)
+        out = []
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "set"
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in ctxvars):
+                continue
+            var = node.func.value.id
+            if not self._reset_in_enclosing_finally(node, par, var):
+                out.append(Finding(
+                    self.id, self.severity, path, node.lineno,
+                    f"{var}.set() without a paired {var}.reset() in an "
+                    f"enclosing finally — an exception leaks the "
+                    f"activation across requests",
+                    "token = var.set(...); try: ... finally: "
+                    "var.reset(token)"))
+        return out
+
+    @staticmethod
+    def _reset_in_enclosing_finally(node, par, var) -> bool:
+        cur = node
+        while cur in par:
+            cur = par[cur]
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a `try/finally` later in the same function (the
+                # token-then-try idiom) also pairs the activation
+                for t in ast.walk(cur):
+                    if isinstance(t, ast.Try) and any(
+                            isinstance(c, ast.Call)
+                            and isinstance(c.func, ast.Attribute)
+                            and c.func.attr == "reset"
+                            and _dotted(c.func.value) == var
+                            for f in t.finalbody for c in ast.walk(f)):
+                        return True
+                return False
+        return False
+
+
+class SnapshotNoPickle(Rule):
+    """snapshot-no-pickle: serve/results serialization paths are
+    pickle-free (a pickled snapshot would happily swallow device
+    arrays and arbitrary code)."""
+
+    id = "snapshot-no-pickle"
+    fixture_path = "src/repro/serve/fixture_snap.py"
+    good = ("import numpy as np\n\n"
+            "def to_bytes(arr, buf):\n"
+            "    np.save(buf, arr, allow_pickle=False)\n")
+    bad = ("import pickle\n\n"
+           "def to_bytes(snapshot):\n"
+           "    return pickle.dumps(snapshot)\n")
+
+    def applies(self, path: str) -> bool:
+        p = path.replace(os.sep, "/")
+        return (p.startswith("src/repro/serve/")
+                or p.startswith("src/repro/results/")) \
+            and p.endswith(".py")
+
+    def check(self, tree, path, source):
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                mod = getattr(node, "module", None) or ""
+                names = [a.name for a in node.names]
+                if "pickle" in names or mod.split(".")[0] == "pickle":
+                    out.append(Finding(
+                        self.id, self.severity, path, node.lineno,
+                        "pickle import in a snapshot/serialization path",
+                        "serialize with a json header + "
+                        "np.save(allow_pickle=False)"))
+            elif isinstance(node, ast.Call):
+                fn = _dotted(node.func)
+                if fn.startswith("pickle."):
+                    out.append(Finding(
+                        self.id, self.severity, path, node.lineno,
+                        f"{fn}() in a snapshot/serialization path",
+                        "snapshots must be pickle-free"))
+                elif fn in ("np.save", "np.load", "numpy.save",
+                            "numpy.load"):
+                    ok = any(kw.arg == "allow_pickle"
+                             and isinstance(kw.value, ast.Constant)
+                             and kw.value.value is False
+                             for kw in node.keywords)
+                    if not ok:
+                        out.append(Finding(
+                            self.id, self.severity, path, node.lineno,
+                            f"{fn}() without allow_pickle=False",
+                            "always pass allow_pickle=False in "
+                            "snapshot paths"))
+        return out
+
+
+class QuantumNoWallclock(Rule):
+    """quantum-wallclock: quantum metering is deterministic — budgets
+    charge logical work (rows expanded), never wall clocks, so a
+    suspend/resume schedule replays identically."""
+
+    id = "quantum-wallclock"
+    fixture_path = "src/repro/serve/fixture_budget.py"
+    good = ("class RowBudget:\n"
+            "    def __init__(self, quantum):\n"
+            "        self.left = quantum\n"
+            "    def charge(self, rows):\n"
+            "        self.left -= rows\n"
+            "        return self.left > 0\n")
+    bad = ("import time\n\n"
+           "class TimeBudget:\n"
+           "    def __init__(self, quantum_s):\n"
+           "        self.t0 = time.monotonic()\n"
+           "        self.quantum_s = quantum_s\n"
+           "    def charge(self, rows):\n"
+           "        return time.monotonic() - self.t0 < self.quantum_s\n")
+
+    _CLOCKS = ("time.time", "time.monotonic", "time.perf_counter",
+               "time.process_time", "datetime.now", "datetime.utcnow",
+               "datetime.datetime.now")
+
+    def applies(self, path: str) -> bool:
+        p = path.replace(os.sep, "/")
+        return p.startswith("src/repro/serve/") and p.endswith(".py")
+
+    def check(self, tree, path, source):
+        out = []
+        for scope in ast.walk(tree):
+            in_budget_cls = (isinstance(scope, ast.ClassDef)
+                             and "Budget" in scope.name)
+            in_charge_fn = (isinstance(scope, ast.FunctionDef)
+                            and scope.name == "charge")
+            if not (in_budget_cls or in_charge_fn):
+                continue
+            where = scope.name
+            for node in ast.walk(scope):
+                if isinstance(node, ast.Call) \
+                        and _dotted(node.func) in self._CLOCKS:
+                    out.append(Finding(
+                        self.id, self.severity, path, node.lineno,
+                        f"wall-clock read {_dotted(node.func)}() inside "
+                        f"quantum-metering code ({where})",
+                        "meter logical work (rows expanded) — "
+                        "suspend/resume must replay deterministically"))
+        return out
+
+
+class UnusedPublicSymbols(Rule):
+    """unused-public-symbol (note): module-level public defs in
+    ``src/repro`` with no reference anywhere else in the repo.  Repo-
+    wide rule — driven through :meth:`check_repo`, not per-file."""
+
+    id = "unused-public-symbol"
+    severity = "note"
+    fixture_path = "src/repro/core/fixture_dead.py"
+    good = "def used_helper():\n    return 1\n"
+    bad = "def totally_unreferenced_helper():\n    return 1\n"
+
+    def applies(self, path: str) -> bool:
+        return False            # repo-wide, see check_repo
+
+    def check(self, tree, path, source):
+        return []
+
+    def definitions(self, tree: ast.Module, path: str
+                    ) -> list[tuple[str, int]]:
+        defs = []
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                if not node.name.startswith("_"):
+                    defs.append((node.name, node.lineno))
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) \
+                            and not t.id.startswith("_") \
+                            and t.id != "__all__" and t.id.isupper():
+                        defs.append((t.id, node.lineno))
+        return defs
+
+    def check_repo(self, files: dict[str, tuple[ast.Module, str]],
+                   corpus: dict[str, str]) -> list[Finding]:
+        out = []
+        for path, (tree, source) in sorted(files.items()):
+            p = path.replace(os.sep, "/")
+            if not p.startswith("src/repro/") or p.endswith("__init__.py"):
+                continue
+            for name, lineno in self.definitions(tree, path):
+                pat = re.compile(rf"\b{re.escape(name)}\b")
+                referenced = False
+                for other, text in corpus.items():
+                    hits = len(pat.findall(text))
+                    if other == path:
+                        hits -= 1       # its own definition line
+                    if hits > 0:
+                        referenced = True
+                        break
+                if not referenced:
+                    out.append(Finding(
+                        self.id, self.severity, path, lineno,
+                        f"public symbol {name!r} has no reference in "
+                        f"src/tests/benchmarks/tools/docs",
+                        "delete it, underscore it, or cover it with a "
+                        "test/doc"))
+        return out
+
+
+RULES: list[Rule] = [ObsHostPurity(), EngineStatsSchema(),
+                     ContextvarPairing(), SnapshotNoPickle(),
+                     QuantumNoWallclock(), UnusedPublicSymbols()]
+
+#: directories whose text counts as a "reference" for the dead-code pass
+_CORPUS_DIRS = ("src", "tests", "benchmarks", "tools", "docs")
+_CORPUS_FILES = ("README.md", "ROADMAP.md", "ARCHITECTURE.md")
+
+
+def _iter_files(root: str, exts=(".py",)):
+    for base, dirs, names in os.walk(root):
+        dirs[:] = [d for d in dirs
+                   if d not in ("__pycache__", ".git", ".venv")]
+        for n in sorted(names):
+            if n.endswith(exts):
+                yield os.path.join(base, n)
+
+
+def collect(repo: str = _REPO):
+    """Parse every lintable source file; returns ``(files, corpus)``.
+
+    ``files`` maps repo-relative path -> (ast, source) for
+    ``src/repro``; ``corpus`` maps path -> text for everything the
+    dead-code pass accepts as a reference.
+    """
+    files: dict[str, tuple[ast.Module, str]] = {}
+    corpus: dict[str, str] = {}
+    for d in _CORPUS_DIRS:
+        droot = os.path.join(repo, d)
+        if not os.path.isdir(droot):
+            continue
+        exts = (".py",) if d in ("src", "tests", "benchmarks", "tools") \
+            else (".md",)
+        for path in _iter_files(droot, exts):
+            rel = os.path.relpath(path, repo).replace(os.sep, "/")
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+            corpus[rel] = text
+            if rel.startswith("src/repro/") and rel.endswith(".py"):
+                files[rel] = (ast.parse(text, filename=rel), text)
+    for name in _CORPUS_FILES:
+        path = os.path.join(repo, name)
+        if os.path.exists(path):
+            with open(path, encoding="utf-8") as fh:
+                corpus[name] = fh.read()
+    return files, corpus
+
+
+def run_lint(repo: str = _REPO, rules: list[Rule] | None = None
+             ) -> tuple[FindingReport, dict[str, str]]:
+    rules = RULES if rules is None else rules
+    files, corpus = collect(repo)
+    findings: list[Finding] = []
+    for path, (tree, source) in sorted(files.items()):
+        for rule in rules:
+            if rule.applies(path):
+                findings.extend(rule.check(tree, path, source))
+    for rule in rules:
+        if hasattr(rule, "check_repo"):
+            findings.extend(rule.check_repo(files, corpus))
+    sources = {p: s for p, (_, s) in files.items()}
+    return FindingReport(filter_suppressed(findings, sources)), sources
+
+
+def self_test() -> int:
+    """Each rule must fire on its bad fixture and pass its good one."""
+    failures = []
+    for rule in RULES:
+        if isinstance(rule, UnusedPublicSymbols):
+            # repo-wide rule: fixture files with an empty/self corpus
+            bad_tree = ast.parse(rule.bad)
+            good_tree = ast.parse(rule.good)
+            bad = rule.check_repo(
+                {rule.fixture_path: (bad_tree, rule.bad)},
+                {rule.fixture_path: rule.bad})
+            good = rule.check_repo(
+                {rule.fixture_path: (good_tree, rule.good)},
+                {rule.fixture_path: rule.good,
+                 "tests/test_x.py": "used_helper()\n"})
+        else:
+            bad = rule.check(ast.parse(rule.bad), rule.fixture_path,
+                             rule.bad)
+            good = rule.check(ast.parse(rule.good), rule.fixture_path,
+                              rule.good)
+        if not bad:
+            failures.append(f"{rule.id}: bad fixture did NOT fire")
+        if good:
+            failures.append(f"{rule.id}: good fixture fired: {good}")
+        if not failures or failures[-1].split(":")[0] != rule.id:
+            print(f"self-test: {rule.id} fires on bad, quiet on good")
+    # suppression must actually suppress
+    sup_rule = SnapshotNoPickle()
+    sup_src = ("import numpy as np\n\n"
+               "def to_bytes(arr, buf):\n"
+               "    np.save(buf, arr)  # repro: noqa-snapshot-no-pickle\n")
+    raw = sup_rule.check(ast.parse(sup_src), sup_rule.fixture_path,
+                         sup_src)
+    kept = filter_suppressed(raw, {sup_rule.fixture_path: sup_src})
+    if not raw:
+        failures.append("noqa self-test: finding did not fire pre-filter")
+    if kept:
+        failures.append("noqa self-test: suppression marker ignored")
+    if not failures:
+        print("self-test: noqa suppression honored")
+    for msg in failures:
+        print(f"self-test FAILED: {msg}", file=sys.stderr)
+    if not failures:
+        print(f"self-test OK: {len(RULES)} rules verified")
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="tools/lint_repro.py")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON findings document here")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run every rule against its embedded good/bad "
+                         "fixtures; the gate must fire")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return self_test()
+    report, _ = run_lint()
+    doc = report.to_json(job="lint-repro",
+                         rules=[r.id for r in RULES])
+    if args.out:
+        with open(args.out, "w") as fh:
+            fh.write(doc + "\n")
+    if args.format == "json":
+        print(doc)
+    else:
+        for f in report.findings:
+            print(f.format())
+        print(f"lint_repro: {len(report.findings)} finding(s), "
+              f"{len(report.errors())} error(s) over {len(RULES)} rules")
+    return 0 if report.gate_passes else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
